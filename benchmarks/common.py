@@ -1,0 +1,45 @@
+"""Shared benchmark helpers: trial running, CSV/JSON artifact output.
+
+CPU-budget note (DESIGN.md §8): the paper's experiments average 10-25
+trials on graphs up to 8000 nodes; on this single-core container the
+default benchmark profile uses 3 trials and the same size range, with
+`--full` restoring the paper's trial counts.  Scaling-law fits still
+span >= 1 decade of n.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "artifacts")
+
+
+def save_artifact(name: str, payload: dict) -> str:
+    os.makedirs(ARTIFACTS, exist_ok=True)
+    path = os.path.join(ARTIFACTS, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+    return path
+
+
+def load_artifact(name: str):
+    path = os.path.join(ARTIFACTS, f"{name}.json")
+    if not os.path.exists(path):
+        return None
+    return json.load(open(path))
+
+
+def csv_line(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.time()
+        return self
+
+    def __exit__(self, *a):
+        self.seconds = time.time() - self.t0

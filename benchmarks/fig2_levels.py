@@ -1,0 +1,49 @@
+"""Paper Fig. 2: messages to 1e-4 accuracy vs number of hierarchy
+levels k.  Expected: diminishing reward beyond 4-5 levels."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import multiscale_gossip, random_geometric_graph
+
+from .common import csv_line, save_artifact
+
+
+def run(n: int = 2000, trials: int = 3, eps: float = 1e-4,
+        max_k: int = 6) -> list[str]:
+    rows = {}
+    t0 = time.time()
+    for k in range(2, max_k + 1):
+        msgs, errs = [], []
+        for t in range(trials):
+            g = random_geometric_graph(n, seed=100 + t)
+            x0 = np.random.default_rng(t).normal(0, 1, n)
+            r = multiscale_gossip(g, x0, eps=eps, k=k, seed=t, weighted=True)
+            msgs.append(r.messages)
+            errs.append(r.error(x0))
+        rows[k] = {
+            "messages_mean": float(np.mean(msgs)),
+            "messages_std": float(np.std(msgs)),
+            "err_mean": float(np.mean(errs)),
+        }
+    save_artifact("fig2_levels", {"n": n, "eps": eps, "rows": rows})
+    total_us = (time.time() - t0) * 1e6
+    out = []
+    best_k = min(rows, key=lambda k: rows[k]["messages_mean"])
+    for k, r in rows.items():
+        out.append(csv_line(
+            f"fig2/levels_k{k}", total_us / len(rows),
+            f"messages={r['messages_mean']:.0f} err={r['err_mean']:.2e}",
+        ))
+    out.append(csv_line(
+        "fig2/diminishing_reward", total_us,
+        f"best_k={best_k} n={n} (paper: 4-5 levels suffice)",
+    ))
+    return out
+
+
+if __name__ == "__main__":
+    for line in run():
+        print(line)

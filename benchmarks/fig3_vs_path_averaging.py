@@ -1,0 +1,92 @@
+"""Paper Fig. 3: total messages to eps=1e-4 vs network size, for
+MultiscaleGossip (auto-k), MultiscaleGossipFI (fixed iterations),
+MultiscaleGossip2level (k=2, a=1/2), and path averaging [13].
+
+Expected (paper): every multiscale variant uses noticeably fewer
+transmissions than path averaging, near-linear growth in n.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import multiscale_gossip, path_averaging, random_geometric_graph
+
+from .common import csv_line, save_artifact
+
+
+def run(sizes=(500, 1000, 2000, 4000, 8000), trials: int = 3,
+        eps: float = 1e-4) -> list[str]:
+    algos = {
+        "multiscale": lambda g, x, s: multiscale_gossip(
+            g, x, eps=eps, seed=s, weighted=True
+        ),
+        "multiscale_fi": lambda g, x, s: multiscale_gossip(
+            g, x, eps=eps, seed=s, weighted=True, fixed_ticks_scale=1.0
+        ),
+        "multiscale_2level": lambda g, x, s: multiscale_gossip(
+            g, x, eps=eps, seed=s, weighted=True, k=2, a=0.5
+        ),
+        "path_averaging": lambda g, x, s: path_averaging(g, x, eps=eps, seed=s),
+    }
+    table: dict = {a: {} for a in algos}
+    timing: dict = {a: 0.0 for a in algos}
+    for n in sizes:
+        for t in range(trials):
+            g = random_geometric_graph(n, seed=1000 + n + t)
+            x0 = np.random.default_rng(n + t).normal(0, 1, n)
+            for name, fn in algos.items():
+                t0 = time.time()
+                r = fn(g, x0, t)
+                timing[name] += time.time() - t0
+                err = r.error(x0)
+                table[name].setdefault(n, []).append(
+                    {"messages": int(r.messages), "err": float(err)}
+                )
+    summary = {
+        name: {
+            n: {
+                "messages_mean": float(np.mean([x["messages"] for x in v])),
+                "err_mean": float(np.mean([x["err"] for x in v])),
+            }
+            for n, v in rows.items()
+        }
+        for name, rows in table.items()
+    }
+    # scaling exponents (log-log fit)
+    fits = {}
+    for name, rows in summary.items():
+        ns = sorted(rows)
+        slope = np.polyfit(
+            np.log([float(n) for n in ns]),
+            np.log([rows[n]["messages_mean"] for n in ns]), 1
+        )[0]
+        fits[name] = float(slope)
+    save_artifact(
+        "fig3_vs_path_averaging",
+        {"eps": eps, "summary": summary, "scaling_exponent": fits},
+    )
+    out = []
+    n_big = max(sizes)
+    for name, rows in summary.items():
+        calls = len(sizes) * trials
+        out.append(csv_line(
+            f"fig3/{name}", timing[name] * 1e6 / calls,
+            f"messages@n{n_big}={rows[n_big]['messages_mean']:.0f} "
+            f"exponent={fits[name]:.2f}",
+        ))
+    ratio = (
+        summary["path_averaging"][n_big]["messages_mean"]
+        / summary["multiscale"][n_big]["messages_mean"]
+    )
+    out.append(csv_line(
+        "fig3/pa_over_multiscale", 0.0,
+        f"ratio@n{n_big}={ratio:.2f} (paper: multiscale wins, Fig.3)",
+    ))
+    return out
+
+
+if __name__ == "__main__":
+    for line in run():
+        print(line)

@@ -1,0 +1,77 @@
+"""Benchmark harness — one entry per paper table/figure + system layers.
+
+Prints ``name,us_per_call,derived`` CSV.  Profiles:
+  default: reduced trial counts sized for a single-core CPU container;
+  --full:  the paper's trial counts / sizes (longer).
+
+The dry-run roofline cells are produced separately
+(`python -m repro.launch.dryrun --all`, hours of XLA compile time) and
+aggregated here if present.
+"""
+from __future__ import annotations
+
+import argparse
+import subprocess
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale trials (slow)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset, e.g. fig3,roofline")
+    args = ap.parse_args()
+
+    from . import (
+        fig2_levels, fig3_vs_path_averaging, fig4_cdf, fig5_failures,
+        kernel_bench, roofline, table1_node_utilization,
+    )
+
+    suites = {
+        "fig2": lambda: fig2_levels.run(
+            n=5000 if args.full else 2000, trials=10 if args.full else 3
+        ),
+        "fig3": lambda: fig3_vs_path_averaging.run(
+            sizes=(500, 1000, 2000, 4000, 8000),
+            trials=10 if args.full else 3,
+        ),
+        "fig4": lambda: fig4_cdf.run(n=2000),
+        "fig5": lambda: fig5_failures.run(n=2000),
+        "table1": lambda: table1_node_utilization.run(
+            n=5000 if args.full else 2000
+        ),
+        "kernels": kernel_bench.run,
+        "sync": lambda: _subprocess_lines("benchmarks.sync_collectives"),
+        "roofline": roofline.run,
+    }
+    if args.only:
+        keep = set(args.only.split(","))
+        suites = {k: v for k, v in suites.items() if k in keep}
+
+    print("name,us_per_call,derived")
+    for name, fn in suites.items():
+        try:
+            for line in fn():
+                print(line, flush=True)
+        except Exception as e:
+            traceback.print_exc(file=sys.stderr)
+            print(f"{name}/ERROR,0.0,{type(e).__name__}: {e}", flush=True)
+
+
+def _subprocess_lines(module: str) -> list[str]:
+    """Run a benchmark that needs its own XLA device count in a fresh
+    process (the forced count must precede jax init)."""
+    proc = subprocess.run(
+        [sys.executable, "-m", module], capture_output=True, text=True,
+        timeout=1800,
+    )
+    if proc.returncode != 0:
+        return [f"{module}/ERROR,0.0,exit={proc.returncode}: "
+                f"{proc.stderr.strip().splitlines()[-1] if proc.stderr else ''}"]
+    return [l for l in proc.stdout.splitlines() if l.strip()]
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""The paper's technique as gradient synchronization: decentralized
+training with multiscale gossip vs exact all-reduce.
+
+R replicas each train on their own batch shard; gradients are mixed by
+the selected strategy.  Multiscale gossip keeps the replicas within a
+consensus ball (the paper's eps) at a fraction of the flat-gossip
+message cost — printed per step as `consensus`.
+
+    PYTHONPATH=src python examples/decentralized_consensus.py --strategy multiscale
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import SyntheticLM
+from repro.dist import SyncConfig, suggest_levels
+from repro.models import Transformer
+from repro.models.config import ModelConfig
+from repro.optim import sgdm
+from repro.train import init_decentralized_state, make_decentralized_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--strategy", default="multiscale",
+                    choices=["allreduce", "hierarchical", "ring", "multiscale"])
+    ap.add_argument("--replicas", type=int, default=8)
+    ap.add_argument("--steps", type=int, default=30)
+    args = ap.parse_args()
+
+    R = args.replicas
+    cfg = ModelConfig(
+        name="consensus-demo", family="dense", num_layers=2, d_model=128,
+        num_heads=4, num_kv_heads=2, head_dim=32, d_ff=256, vocab_size=1024,
+        remat=False, dtype="float32",
+    )
+    model = Transformer(cfg, model_axis=1)
+    base = model.init(jax.random.PRNGKey(0))
+    params_r = jax.tree.map(lambda p: jnp.broadcast_to(p[None], (R,) + p.shape), base)
+    opt = sgdm()
+    state = init_decentralized_state(params_r, opt)
+    levels = suggest_levels(R)
+    sync = SyncConfig(strategy=args.strategy, levels=levels)
+    print(f"strategy={args.strategy} R={R} levels={levels} "
+          f"(paper rule: cells of ~R^(2/3))")
+    step = jax.jit(make_decentralized_step(cfg, opt, lambda s: 5e-2, sync, R))
+    data = SyntheticLM(cfg.vocab_size, seq_len=64, global_batch=R * 2, seed=0)
+    for s in range(args.steps):
+        b = data.batch_at(s)
+        batch = {k: jnp.asarray(v.reshape(R, 2, *v.shape[1:])) for k, v in b.items()}
+        state, m = step(state, batch)
+        if s % 5 == 0 or s == args.steps - 1:
+            print(f"step {s:3d}  loss={float(m['loss']):.3f}  "
+                  f"consensus={float(m['consensus_distance']):.2e}")
+    if args.strategy in ("allreduce", "hierarchical"):
+        assert float(m["consensus_distance"]) < 1e-6, "exact modes stay in sync"
+        print("exact strategy: replicas remain bitwise-identical  OK")
+    else:
+        print("gossip strategy: replicas stay within the consensus ball "
+              "(paper Thm 2 analogue)")
+
+
+if __name__ == "__main__":
+    main()

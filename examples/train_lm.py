@@ -1,0 +1,79 @@
+"""End-to-end training driver: an LM trained with the full substrate —
+deterministic data pipeline, AdamW + cosine schedule, atomic
+checkpointing with auto-resume, metrics JSONL.
+
+    PYTHONPATH=src python examples/train_lm.py --preset 100m --steps 300
+    PYTHONPATH=src python examples/train_lm.py --preset smoke --steps 20
+
+Presets (decoder-only llama-style):
+  smoke : ~2M params  (seconds on CPU)
+  25m   : ~25M params
+  100m  : ~115M params (the assignment's "~100M for a few hundred
+          steps"; several hours on a 1-core CPU container — sized for a
+          real accelerator)
+"""
+import argparse
+import os
+
+import jax
+import numpy as np
+
+from repro.data import SyntheticLM
+from repro.models import Transformer
+from repro.models.config import ModelConfig
+from repro.optim import adamw, cosine_schedule
+from repro.train import Trainer, init_train_state, make_train_step
+
+PRESETS = {
+    "smoke": dict(num_layers=2, d_model=128, num_heads=4, num_kv_heads=2,
+                  head_dim=32, d_ff=256, vocab_size=2048, seq=128, batch=4),
+    "25m": dict(num_layers=6, d_model=512, num_heads=8, num_kv_heads=4,
+                head_dim=64, d_ff=1536, vocab_size=8192, seq=256, batch=8),
+    "100m": dict(num_layers=12, d_model=768, num_heads=12, num_kv_heads=4,
+                 head_dim=64, d_ff=3072, vocab_size=32768, seq=512, batch=8),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", choices=list(PRESETS), default="smoke")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    ap.add_argument("--lr", type=float, default=3e-4)
+    args = ap.parse_args()
+
+    p = PRESETS[args.preset]
+    cfg = ModelConfig(
+        name=f"train-lm-{args.preset}", family="dense",
+        num_layers=p["num_layers"], d_model=p["d_model"],
+        num_heads=p["num_heads"], num_kv_heads=p["num_kv_heads"],
+        head_dim=p["head_dim"], d_ff=p["d_ff"], vocab_size=p["vocab_size"],
+        tie_embeddings=True, remat=False, dtype="float32",
+    )
+    model = Transformer(cfg, model_axis=1)
+    print(f"model: {model.num_params / 1e6:.1f}M params")
+
+    opt = adamw(weight_decay=0.01)
+    lr = cosine_schedule(args.lr, warmup=20, total=args.steps)
+    data = SyntheticLM(cfg.vocab_size, seq_len=p["seq"],
+                       global_batch=p["batch"], seed=0)
+    step_fn = make_train_step(cfg, opt, lr, dp=None)
+    state = init_train_state(model.init(jax.random.PRNGKey(0)), opt)
+
+    os.makedirs(args.ckpt_dir, exist_ok=True)
+    trainer = Trainer(
+        step_fn, state, data,
+        ckpt_dir=args.ckpt_dir, save_every=50,
+        log_path=os.path.join(args.ckpt_dir, "metrics.jsonl"),
+    )
+    history = trainer.run(args.steps)
+    first, last = history[0], history[-1]
+    print(f"step {first['step']}: loss={first['loss']:.3f}")
+    print(f"step {last['step']}: loss={last['loss']:.3f} "
+          f"({last['sec_per_step']:.2f}s/step)")
+    assert last["loss"] < first["loss"], "loss should decrease"
+    print(f"checkpoints under {args.ckpt_dir} — rerun to auto-resume")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""The paper's primary contribution: multiscale gossip for decentralized
+averaging (Tsianos & Rabbat, 2010), plus the baselines it is evaluated
+against and the failure models of §VI-C.
+
+The production mapping of this algorithm onto TPU meshes (gradient
+synchronization) lives in `repro.dist`; the MXU-friendly batched cell
+mixing kernel lives in `repro.kernels.cell_mixing`.
+"""
+from .baselines import (
+    BaselineResult,
+    geographic_gossip,
+    path_averaging,
+    standard_gossip,
+)
+from .failures import handshake_cost
+from .gossip import GossipResult, batched_graphs, gossip_until
+from .metrics import relative_error, theorem2_bound
+from .multiscale import LevelReport, MultiscaleResult, multiscale_gossip
+from .partition import Partition, auto_levels, build_partition
+from .rgg import Graph, connectivity_radius, grid_graph, random_geometric_graph
+from .routing import Route, greedy_route, route_table, route_to_node
+from .synchronous import SyncMultiscaleResult, synchronous_multiscale
+
+__all__ = [
+    "BaselineResult",
+    "Graph",
+    "GossipResult",
+    "LevelReport",
+    "MultiscaleResult",
+    "Partition",
+    "Route",
+    "auto_levels",
+    "batched_graphs",
+    "build_partition",
+    "connectivity_radius",
+    "geographic_gossip",
+    "gossip_until",
+    "greedy_route",
+    "grid_graph",
+    "handshake_cost",
+    "multiscale_gossip",
+    "path_averaging",
+    "random_geometric_graph",
+    "relative_error",
+    "route_table",
+    "route_to_node",
+    "standard_gossip",
+    "SyncMultiscaleResult",
+    "synchronous_multiscale",
+    "theorem2_bound",
+]

@@ -1,0 +1,210 @@
+"""Baselines the paper compares against (§II, §VI).
+
+* `path_averaging`  — Benezit et al. [13]: route to a random target,
+  average ALL nodes along the path (the state of the art the paper
+  benchmarks against in Fig. 3/5).
+* `geographic_gossip` — Dimakis et al. [11]: route to a random target,
+  pairwise-average with the recipient only.
+* `standard_gossip` — Boyd et al. [2]: single-hop neighbor gossip
+  (wraps the batched engine with B=1).
+
+All report total single-hop transmissions and per-node send counts so
+the paper's figures can be reproduced exactly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from .gossip import gossip_until
+from .rgg import Graph
+
+__all__ = [
+    "BaselineResult",
+    "path_averaging",
+    "geographic_gossip",
+    "standard_gossip",
+]
+
+
+@dataclasses.dataclass
+class BaselineResult:
+    x: np.ndarray            # (n,) final estimates
+    messages: int            # total single-hop transmissions
+    iterations: int
+    converged: bool
+    node_sends: np.ndarray   # (n,)
+
+    def error(self, x0: np.ndarray) -> float:
+        avg = float(np.mean(x0))
+        return float(np.linalg.norm(self.x - avg) / np.linalg.norm(x0))
+
+
+def _greedy_path(g: Graph, src: int, target_xy: np.ndarray) -> list[int]:
+    """Greedy geographic route; returns node list ending at the local
+    minimizer of distance-to-target (the message recipient)."""
+    coords = g.coords
+    cur = int(src)
+    d_cur = float((coords[cur, 0] - target_xy[0]) ** 2 + (coords[cur, 1] - target_xy[1]) ** 2)
+    path = [cur]
+    while True:
+        deg = g.degrees[cur]
+        if deg == 0:
+            return path
+        nbrs = g.neighbors[cur, :deg]
+        d = np.sum((coords[nbrs] - target_xy) ** 2, axis=1)
+        best = int(np.argmin(d))
+        if d[best] >= d_cur:
+            return path
+        cur = int(nbrs[best])
+        d_cur = float(d[best])
+        path.append(cur)
+
+
+def path_averaging(
+    g: Graph,
+    x0: np.ndarray,
+    *,
+    eps: float = 1e-4,
+    seed: int = 0,
+    max_iters: int = 2_000_000,
+    check_every: int = 32,
+    loss_p: Optional[float] = None,
+) -> BaselineResult:
+    """Randomized path averaging [13].
+
+    One iteration: a uniformly random node wakes, draws a uniform target
+    location, greedy-routes toward it accumulating values (|S|-1
+    messages), the recipient averages and sends the result back down the
+    path (|S|-1 messages), and every path node adopts the average.
+
+    With `loss_p`, every single-hop transmission independently succeeds
+    w.p. loss_p; a lost forward message aborts the iteration, a lost
+    reply strands the prefix of the path with stale values (mass is
+    distorted — paper §VI-C-2).
+    """
+    rng = np.random.default_rng(seed)
+    n = g.n
+    x = np.asarray(x0, np.float64).copy()
+    mean = float(np.mean(x0))
+    tol = eps * float(np.linalg.norm(x0))
+    node_sends = np.zeros(n, np.int64)
+    messages = 0
+    it = 0
+    converged = False
+    while it < max_iters:
+        for _ in range(check_every):
+            it += 1
+            src = int(rng.integers(n))
+            target = rng.uniform(0.0, 1.0, 2)
+            path = _greedy_path(g, src, target)
+            L = len(path) - 1
+            if L == 0:
+                # degenerate: src is already closest to the target
+                continue
+            if loss_p is None:
+                messages += 2 * L
+                node_sends[path[:-1]] += 1
+                node_sends[path[1:]] += 1
+                x[path] = np.mean(x[path])
+            else:
+                # forward pass: hop t = path[t-1] -> path[t]
+                fwd_fail = rng.geometric(1.0 - loss_p)  # first failing hop
+                if fwd_fail <= L:
+                    messages += fwd_fail
+                    node_sends[path[:fwd_fail]] += 1
+                    continue
+                messages += L
+                node_sends[path[:-1]] += 1
+                avg = float(np.mean(x[path]))
+                # reply pass: hop t = path[L-t+1] -> path[L-t]
+                rep_fail = rng.geometric(1.0 - loss_p)
+                upd = min(rep_fail, L)
+                messages += upd
+                node_sends[path[L : L - upd : -1]] += 1
+                x[path[L - upd + 1 :]] = avg  # recipient + delivered prefix
+        if np.linalg.norm(x - mean) <= tol:
+            converged = True
+            break
+    return BaselineResult(
+        x=x, messages=messages, iterations=it, converged=converged,
+        node_sends=node_sends,
+    )
+
+
+def geographic_gossip(
+    g: Graph,
+    x0: np.ndarray,
+    *,
+    eps: float = 1e-4,
+    seed: int = 0,
+    max_iters: int = 5_000_000,
+    check_every: int = 64,
+) -> BaselineResult:
+    """Geographic gossip [11]: pairwise averaging with the node closest
+    to a random target location, 2*hops messages per iteration."""
+    rng = np.random.default_rng(seed)
+    n = g.n
+    x = np.asarray(x0, np.float64).copy()
+    mean = float(np.mean(x0))
+    tol = eps * float(np.linalg.norm(x0))
+    node_sends = np.zeros(n, np.int64)
+    messages = 0
+    it = 0
+    converged = False
+    while it < max_iters:
+        for _ in range(check_every):
+            it += 1
+            src = int(rng.integers(n))
+            target = rng.uniform(0.0, 1.0, 2)
+            path = _greedy_path(g, src, target)
+            L = len(path) - 1
+            dst = path[-1]
+            if dst == src:
+                continue
+            messages += 2 * L
+            node_sends[path[:-1]] += 1
+            node_sends[path[1:]] += 1
+            avg = 0.5 * (x[src] + x[dst])
+            x[src] = avg
+            x[dst] = avg
+        if np.linalg.norm(x - mean) <= tol:
+            converged = True
+            break
+    return BaselineResult(
+        x=x, messages=messages, iterations=it, converged=converged,
+        node_sends=node_sends,
+    )
+
+
+def standard_gossip(
+    g: Graph,
+    x0: np.ndarray,
+    *,
+    eps: float = 1e-4,
+    seed: int = 0,
+    max_ticks: int = 50_000_000,
+) -> BaselineResult:
+    """Single-hop randomized gossip [2] via the batched engine (B=1)."""
+    res = gossip_until(
+        np.asarray(x0, np.float32)[None, :],
+        g.neighbors[None],
+        g.degrees[None],
+        np.array([g.n], np.int32),
+        eps=eps,
+        seed=seed,
+        max_ticks=max_ticks,
+    )
+    usage = res.edge_usage[0]
+    node_sends = usage.sum(axis=1).astype(np.int64)
+    valid = g.neighbors >= 0
+    np.add.at(node_sends, g.neighbors[valid], usage[valid])
+    return BaselineResult(
+        x=res.estimates()[0, : g.n],
+        messages=res.total_messages,
+        iterations=int(res.ticks[0]),
+        converged=bool(res.converged[0]),
+        node_sends=node_sends,
+    )

@@ -1,0 +1,31 @@
+"""Transmission-failure models (paper §VI-C).
+
+* Handshake model: every single-hop transmission independently succeeds
+  w.p. p, and link-level ACK/retransmission repeats it until delivery.
+  The algorithm trajectory is UNCHANGED — only the cost inflates: each
+  logical transmission costs Geometric(p) physical ones.  Sampled
+  exactly as T + NegBinomial(T, p) (sum of T iid geometrics).
+
+* Message-loss model: a transmission failing means the message is gone.
+  This changes the trajectory and destroys mass; it is implemented
+  inside the gossip engine (`loss_p=`) and path averaging (`loss_p=`),
+  per §VI-C-2.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["handshake_cost"]
+
+
+def handshake_cost(
+    transmissions: int, p: float, rng: np.random.Generator | None = None
+) -> int:
+    """Physical transmissions needed to deliver `transmissions` messages
+    when each attempt succeeds w.p. p with retransmission until success."""
+    if not 0.0 < p <= 1.0:
+        raise ValueError(f"success probability must be in (0, 1], got {p}")
+    if p == 1.0 or transmissions == 0:
+        return int(transmissions)
+    rng = rng or np.random.default_rng(0)
+    return int(transmissions) + int(rng.negative_binomial(transmissions, p))

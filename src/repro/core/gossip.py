@@ -1,0 +1,250 @@
+"""Randomized pairwise gossip (Boyd et al. [2]) — the black box used by
+multiscale gossip (paper §III, Alg. 1 lines 9/15).
+
+The engine is batched and fully jittable: B independent graphs (e.g. all
+cells of one hierarchy level) gossip in lockstep, each with its own
+convergence flag, so one `lax.while_loop` simulates a whole level.  The
+asynchronous time model is standard: at each tick a uniformly random
+node of each not-yet-converged graph wakes, picks a uniformly random
+neighbor, and the pair averages.  Messages are counted per directed edge
+so multi-hop overlay costs and per-node/relay attribution can be
+computed afterwards.
+
+Values may carry V channels (V=2 supports the mass-weighted variant,
+where a pair (w*x, w) is averaged and the estimate is their ratio; the
+paper's plain algorithm uses V=1).
+
+Optional per-hop message loss (paper §VI-C-2): each single-hop
+transmission of an exchange succeeds w.p. `loss_p`; a lost request
+aborts the exchange, a lost reply leaves only the contacted node
+updated (mass distortion — exactly the failure the paper analyzes).
+
+Shapes (static under jit):
+  x         : (B, C, V)   node values, padded with 0
+  neighbors : (B, C, D)   padded with -1
+  degrees   : (B, C)      0 for padding nodes
+  n_nodes   : (B,)        number of live nodes per graph
+  edge_hops : (B, C, D)   geographic-routing hops for that directed edge
+                          (1 for base graphs); one exchange costs
+                          2*hops single-hop transmissions when reliable
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["GossipResult", "gossip_until", "batched_graphs"]
+
+
+@dataclasses.dataclass
+class GossipResult:
+    x: np.ndarray            # (B, C, V) final values
+    ticks: np.ndarray        # (B,) exchanges attempted per graph
+    converged: np.ndarray    # (B,) bool
+    edge_usage: np.ndarray   # (B, C, D) int32: #exchanges initiated i->j
+    messages: np.ndarray     # (B,) total single-hop transmissions
+
+    @property
+    def total_messages(self) -> int:
+        return int(self.messages.sum())
+
+    def estimates(self) -> np.ndarray:
+        """(B, C) per-node estimates (ratio of channels if V == 2)."""
+        if self.x.shape[-1] == 1:
+            return self.x[..., 0]
+        # channel 1 is a positive mass (node counts) in the weighted variant
+        return self.x[..., 0] / np.maximum(self.x[..., 1], 1e-30)
+
+
+def _truncated_failure_hops(u, p, h):
+    """Hops transmitted for a message over h hops with per-hop success p.
+
+    Successes before first failure: S = floor(log u / log p); delivered
+    iff S >= h (transmits h); else transmits S + 1.  Returns
+    (delivered, hops_transmitted).
+    """
+    s = jnp.where(p < 1.0, jnp.floor(jnp.log(u) / jnp.log(jnp.maximum(p, 1e-12))), jnp.inf)
+    delivered = s >= h
+    return delivered, jnp.where(delivered, h, s + 1.0).astype(jnp.int32)
+
+
+def _one_tick(state, t, neighbors, degrees, n_nodes, edge_hops, key, loss_p):
+    x, usage, msgs, done = state
+    B, C, D = neighbors.shape
+    kt = jax.random.fold_in(key, t)
+    ki, kj, kf, kr = jax.random.split(kt, 4)
+    bidx = jnp.arange(B)
+    # pick a waking node per graph (uniform over live nodes)
+    u = jax.random.uniform(ki, (B,))
+    i = jnp.minimum((u * n_nodes).astype(jnp.int32), n_nodes - 1)
+    deg_i = jnp.take_along_axis(degrees, i[:, None], axis=1)[:, 0]
+    v = jax.random.uniform(kj, (B,))
+    jidx = jnp.minimum((v * deg_i).astype(jnp.int32), jnp.maximum(deg_i - 1, 0))
+    j = neighbors[bidx, i, jidx]
+    j_safe = jnp.maximum(j, 0)
+    active = (~done) & (deg_i > 0) & (j >= 0)
+    hops = edge_hops[bidx, i, jidx]
+
+    if loss_p is None:
+        fwd_ok = jnp.ones((B,), bool)
+        rep_ok = jnp.ones((B,), bool)
+        cost = 2 * hops
+    else:
+        p = jnp.asarray(loss_p, x.dtype)
+        fwd_ok, fwd_hops = _truncated_failure_hops(
+            jax.random.uniform(kf, (B,)), p, hops
+        )
+        rep_ok, rep_hops = _truncated_failure_hops(
+            jax.random.uniform(kr, (B,)), p, hops
+        )
+        cost = fwd_hops + jnp.where(fwd_ok, rep_hops, 0)
+
+    xi = x[bidx, i]
+    xj = x[bidx, j_safe]
+    avg = 0.5 * (xi + xj)
+    upd_j = (active & fwd_ok)[:, None]          # j updates iff request arrived
+    upd_i = (active & fwd_ok & rep_ok)[:, None]  # i updates iff reply arrived
+    x = x.at[bidx, j_safe].set(jnp.where(upd_j, avg, xj))
+    x = x.at[bidx, i].set(jnp.where(upd_i, avg, xi))
+    usage = usage.at[bidx, i, jidx].add(active.astype(jnp.int32))
+    msgs = msgs + jnp.where(active, cost, 0)
+    return (x, usage, msgs, done), None
+
+
+@partial(jax.jit, static_argnames=("max_ticks", "check_every", "loss_p"))
+def _gossip_loop(
+    x0,
+    neighbors,
+    degrees,
+    n_nodes,
+    edge_hops,
+    node_mask,
+    eps,
+    key,
+    max_ticks: int,
+    check_every: int,
+    loss_p: Optional[float],
+):
+    B, C, D = neighbors.shape
+    live = node_mask.astype(x0.dtype)[..., None]  # (B, C, 1)
+    denom = jnp.maximum(live.sum(1), 1.0)
+    mean = (x0 * live).sum(1) / denom             # (B, V)
+    x0_norm = jnp.sqrt(((x0 * live) ** 2).sum((1, 2)))
+    tol = eps * jnp.maximum(x0_norm, 1e-30)
+
+    def err(x):
+        d = (x - mean[:, None, :]) * live
+        return jnp.sqrt((d**2).sum((1, 2)))
+
+    def chunk(carry):
+        x, usage, msgs, done, ticks, t0 = carry
+        state = (x, usage, msgs, done)
+        state, _ = jax.lax.scan(
+            lambda s, t: _one_tick(
+                s, t, neighbors, degrees, n_nodes, edge_hops, key, loss_p
+            ),
+            state,
+            t0 + jnp.arange(check_every),
+        )
+        x, usage, msgs, done = state
+        ticks = ticks + jnp.where(done, 0, check_every)
+        done = done | (err(x) <= tol)
+        return (x, usage, msgs, done, ticks, t0 + check_every)
+
+    def cond(carry):
+        *_, done, _ticks, t0 = carry
+        return (~jnp.all(done)) & (t0 < max_ticks)
+
+    usage0 = jnp.zeros((B, C, D), jnp.int32)
+    msgs0 = jnp.zeros((B,), jnp.int32)
+    done0 = err(x0) <= tol  # already-converged graphs (e.g. 1-node cells)
+    ticks0 = jnp.zeros((B,), jnp.int32)
+    carry = (x0, usage0, msgs0, done0, ticks0, jnp.array(0, jnp.int32))
+    x, usage, msgs, done, ticks, _ = jax.lax.while_loop(cond, chunk, carry)
+    return x, usage, msgs, done, ticks
+
+
+def gossip_until(
+    x0: np.ndarray,
+    neighbors: np.ndarray,
+    degrees: np.ndarray,
+    n_nodes: np.ndarray,
+    *,
+    eps: float,
+    seed: int = 0,
+    edge_hops: Optional[np.ndarray] = None,
+    node_mask: Optional[np.ndarray] = None,
+    max_ticks: int = 2_000_000,
+    check_every: int = 64,
+    fixed_ticks: Optional[int] = None,
+    loss_p: Optional[float] = None,
+) -> GossipResult:
+    """Run batched randomized gossip to eps-accuracy (or `fixed_ticks`).
+
+    `fixed_ticks` implements the paper's fixed-iterations variant
+    (MultiscaleGossipFI, §VI): exactly that many exchanges per graph, no
+    convergence oracle.  Convergence is re-checked every `check_every`
+    ticks, so up to that many extra exchanges can occur after the true
+    crossing (convergence detection is not free in reality either).
+    """
+    x0 = np.asarray(x0)
+    if x0.ndim == 2:
+        x0 = x0[..., None]
+    B, C, V = x0.shape
+    if edge_hops is None:
+        edge_hops = np.ones(neighbors.shape, np.int32)
+    if node_mask is None:
+        node_mask = np.arange(C)[None, :] < np.asarray(n_nodes)[:, None]
+    key = jax.random.PRNGKey(seed)
+    if fixed_ticks is not None:
+        eps_eff = -1.0  # negative tol: the oracle never fires
+        check = max(1, min(check_every, int(fixed_ticks)))
+        max_t = ((int(fixed_ticks) + check - 1) // check) * check
+    else:
+        eps_eff, max_t, check = float(eps), int(max_ticks), int(check_every)
+    x, usage, msgs, done, ticks = _gossip_loop(
+        jnp.asarray(x0, jnp.float32),
+        jnp.asarray(neighbors, jnp.int32),
+        jnp.asarray(degrees, jnp.int32),
+        jnp.asarray(n_nodes, jnp.int32),
+        jnp.asarray(edge_hops, jnp.int32),
+        jnp.asarray(node_mask, bool),
+        jnp.asarray(eps_eff, jnp.float32),
+        key,
+        max_ticks=max_t,
+        check_every=check,
+        loss_p=loss_p,
+    )
+    return GossipResult(
+        x=np.asarray(x),
+        ticks=np.asarray(ticks),
+        converged=np.asarray(done),
+        edge_usage=np.asarray(usage),
+        messages=np.asarray(msgs),
+    )
+
+
+def batched_graphs(
+    graphs: list,
+) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Pad a list of `rgg.Graph`-like (neighbors, degrees) into batch form.
+
+    Returns (neighbors (B,C,D), degrees (B,C), n_nodes (B,), node_mask).
+    """
+    B = len(graphs)
+    C = max(1, max(g.n for g in graphs))
+    D = max(1, max(g.max_deg for g in graphs))
+    neighbors = np.full((B, C, D), -1, np.int32)
+    degrees = np.zeros((B, C), np.int32)
+    n_nodes = np.zeros((B,), np.int32)
+    for b, g in enumerate(graphs):
+        neighbors[b, : g.n, : g.max_deg] = g.neighbors
+        degrees[b, : g.n] = g.degrees
+        n_nodes[b] = g.n
+    node_mask = np.arange(C)[None, :] < n_nodes[:, None]
+    return neighbors, degrees, n_nodes, node_mask

@@ -1,0 +1,173 @@
+"""Random geometric graph (RGG) and grid topologies (paper §II).
+
+The paper's connectivity model: n nodes uniform in the unit square, edge
+iff Euclidean distance <= r(n) = sqrt(c * log(n) / n).  The paper's
+experiments use c = 3 (r = sqrt(3 log n / n)), which also guarantees the
+geo-density property used in §V (every r x r patch holds Theta(log n)
+nodes w.h.p.).
+
+Graphs are stored in a padded-neighbor format so the gossip inner loops
+can run as fully-vectorized JAX code with static shapes:
+
+  neighbors : (n, max_deg) int32   -- padded with -1
+  degrees   : (n,)         int32
+  coords    : (n, 2)       float64
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+from scipy.spatial import cKDTree
+
+__all__ = ["Graph", "random_geometric_graph", "grid_graph", "connectivity_radius"]
+
+
+def connectivity_radius(n: int, c: float = 3.0) -> float:
+    """r(n) = sqrt(c log n / n) (paper §II, experiments use c=3)."""
+    return float(np.sqrt(c * np.log(n) / n))
+
+
+@dataclasses.dataclass(frozen=True)
+class Graph:
+    """Padded-adjacency graph embedded in the unit square."""
+
+    coords: np.ndarray      # (n, 2) float64, positions in [0,1]^2
+    neighbors: np.ndarray   # (n, max_deg) int32, padded with -1
+    degrees: np.ndarray     # (n,) int32
+    radius: float
+
+    @property
+    def n(self) -> int:
+        return int(self.coords.shape[0])
+
+    @property
+    def max_deg(self) -> int:
+        return int(self.neighbors.shape[1])
+
+    @property
+    def num_edges(self) -> int:
+        return int(self.degrees.sum()) // 2
+
+    def edge_list(self) -> np.ndarray:
+        """(m, 2) int32 array of undirected edges (i < j)."""
+        rows = np.repeat(np.arange(self.n), self.degrees)
+        cols = self.neighbors[self.neighbors >= 0]
+        mask = rows < cols
+        return np.stack([rows[mask], cols[mask]], axis=1).astype(np.int32)
+
+    def is_connected(self) -> bool:
+        return _num_components(self) == 1
+
+    def subgraph_labels(self) -> np.ndarray:
+        """Connected-component label per node (BFS over padded adjacency)."""
+        return _component_labels(self)
+
+
+def _adjacency_from_pairs(n: int, pairs: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Build padded neighbor arrays from an (m, 2) undirected pair list."""
+    if pairs.size == 0:
+        return np.full((n, 1), -1, np.int32), np.zeros((n,), np.int32)
+    src = np.concatenate([pairs[:, 0], pairs[:, 1]])
+    dst = np.concatenate([pairs[:, 1], pairs[:, 0]])
+    order = np.argsort(src, kind="stable")
+    src, dst = src[order], dst[order]
+    degrees = np.bincount(src, minlength=n).astype(np.int32)
+    max_deg = max(1, int(degrees.max()))
+    neighbors = np.full((n, max_deg), -1, np.int32)
+    # offsets within each row
+    starts = np.zeros(n + 1, np.int64)
+    np.cumsum(degrees, out=starts[1:])
+    col_idx = np.arange(len(src)) - starts[src]
+    neighbors[src, col_idx] = dst
+    return neighbors, degrees
+
+
+def random_geometric_graph(
+    n: int,
+    c: float = 3.0,
+    seed: int = 0,
+    coords: Optional[np.ndarray] = None,
+    radius: Optional[float] = None,
+) -> Graph:
+    """Sample an RGG(n, r(n)) in the unit square (paper §II)."""
+    rng = np.random.default_rng(seed)
+    if coords is None:
+        coords = rng.uniform(0.0, 1.0, size=(n, 2))
+    r = connectivity_radius(n, c) if radius is None else float(radius)
+    tree = cKDTree(coords)
+    pairs = tree.query_pairs(r, output_type="ndarray").astype(np.int32)
+    neighbors, degrees = _adjacency_from_pairs(n, pairs)
+    return Graph(coords=coords, neighbors=neighbors, degrees=degrees, radius=r)
+
+
+def grid_graph(side: int, jitter: float = 0.0, seed: int = 0) -> Graph:
+    """sqrt(n) x sqrt(n) lattice embedded in the unit square (paper §VIII)."""
+    n = side * side
+    ii, jj = np.meshgrid(np.arange(side), np.arange(side), indexing="ij")
+    coords = np.stack(
+        [(ii.ravel() + 0.5) / side, (jj.ravel() + 0.5) / side], axis=1
+    ).astype(np.float64)
+    if jitter > 0:
+        rng = np.random.default_rng(seed)
+        coords = coords + rng.uniform(-jitter, jitter, coords.shape) / side
+        coords = np.clip(coords, 0.0, 1.0)
+    idx = np.arange(n).reshape(side, side)
+    pairs = np.concatenate(
+        [
+            np.stack([idx[:, :-1].ravel(), idx[:, 1:].ravel()], axis=1),
+            np.stack([idx[:-1, :].ravel(), idx[1:, :].ravel()], axis=1),
+        ]
+    ).astype(np.int32)
+    neighbors, degrees = _adjacency_from_pairs(n, pairs)
+    return Graph(coords=coords, neighbors=neighbors, degrees=degrees, radius=1.5 / side)
+
+
+def induced_subgraph(g: Graph, node_ids: np.ndarray) -> tuple[Graph, np.ndarray]:
+    """Subgraph induced by node_ids; returns (subgraph, node_ids) with local
+    indices 0..len-1 mapping to the original ids (paper Alg. 1 line 14)."""
+    node_ids = np.asarray(node_ids, np.int32)
+    remap = np.full(g.n, -1, np.int32)
+    remap[node_ids] = np.arange(len(node_ids), dtype=np.int32)
+    nbr = g.neighbors[node_ids]
+    nbr_mapped = np.where(nbr >= 0, remap[np.clip(nbr, 0, None)], -1)
+    # compact each row: keep only neighbors inside the cell
+    keep = nbr_mapped >= 0
+    degrees = keep.sum(axis=1).astype(np.int32)
+    max_deg = max(1, int(degrees.max())) if len(node_ids) else 1
+    neighbors = np.full((len(node_ids), max_deg), -1, np.int32)
+    for row in range(len(node_ids)):  # rows are tiny (bounded degree)
+        vals = nbr_mapped[row][keep[row]]
+        neighbors[row, : len(vals)] = vals
+    return (
+        Graph(
+            coords=g.coords[node_ids],
+            neighbors=neighbors,
+            degrees=degrees,
+            radius=g.radius,
+        ),
+        node_ids,
+    )
+
+
+def _component_labels(g: Graph) -> np.ndarray:
+    labels = np.full(g.n, -1, np.int32)
+    current = 0
+    for start in range(g.n):
+        if labels[start] >= 0:
+            continue
+        stack = [start]
+        labels[start] = current
+        while stack:
+            u = stack.pop()
+            for v in g.neighbors[u, : g.degrees[u]]:
+                if labels[v] < 0:
+                    labels[v] = current
+                    stack.append(int(v))
+        current += 1
+    return labels
+
+
+def _num_components(g: Graph) -> int:
+    return int(_component_labels(g).max()) + 1 if g.n else 0

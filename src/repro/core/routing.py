@@ -1,0 +1,103 @@
+"""Greedy geographic routing (paper §II, Dimakis et al. [11]).
+
+A message addressed to a target (x, y) location is forwarded, at each
+hop, to the neighbor closest to the target; the node closer to the
+target than all of its neighbors is the final recipient.  For RGGs with
+the connectivity radius this succeeds w.h.p.; as an engineering fallback
+(finite n), a stuck route that has not reached the intended node is
+completed with a BFS shortest path and flagged.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Optional
+
+import numpy as np
+
+from .rgg import Graph
+
+__all__ = ["Route", "greedy_route", "route_to_node", "route_table"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Route:
+    nodes: np.ndarray   # node ids along the path, nodes[0] = source
+    hops: int           # len(nodes) - 1
+    greedy_ok: bool     # False if BFS fallback was needed
+
+    def send_counts(self, n: int) -> np.ndarray:
+        """Per-node single-hop sends for one request+reply exchange.
+
+        Forward pass: nodes[0..L-1] each transmit once; reply pass:
+        nodes[L..1] each transmit once (2L transmissions total).
+        """
+        sends = np.zeros(n, np.int64)
+        if self.hops > 0:
+            np.add.at(sends, self.nodes[:-1], 1)
+            np.add.at(sends, self.nodes[1:], 1)
+        return sends
+
+
+def greedy_route(
+    g: Graph, src: int, target_xy: np.ndarray, max_hops: Optional[int] = None
+) -> Route:
+    """Route from `src` toward the point `target_xy`; returns the path to
+    the node that is locally closest to the target."""
+    if max_hops is None:
+        max_hops = 4 * g.n
+    coords = g.coords
+    path = [int(src)]
+    cur = int(src)
+    d_cur = float(np.sum((coords[cur] - target_xy) ** 2))
+    for _ in range(max_hops):
+        deg = g.degrees[cur]
+        if deg == 0:
+            break
+        nbrs = g.neighbors[cur, :deg]
+        d = np.sum((coords[nbrs] - target_xy) ** 2, axis=1)
+        best = int(np.argmin(d))
+        if d[best] >= d_cur:
+            break  # cur is the local minimizer: final recipient
+        cur = int(nbrs[best])
+        d_cur = float(d[best])
+        path.append(cur)
+    return Route(nodes=np.asarray(path, np.int32), hops=len(path) - 1, greedy_ok=True)
+
+
+def route_to_node(g: Graph, src: int, dst: int) -> Route:
+    """Greedy-route from src to the location of dst; BFS fallback if the
+    greedy walk terminates elsewhere (rare on connected RGGs)."""
+    r = greedy_route(g, src, g.coords[dst])
+    if int(r.nodes[-1]) == int(dst):
+        return r
+    bfs = _bfs_path(g, src, dst)
+    if bfs is None:  # disconnected: report the greedy attempt
+        return Route(nodes=r.nodes, hops=r.hops, greedy_ok=False)
+    return Route(nodes=bfs, hops=len(bfs) - 1, greedy_ok=False)
+
+
+def _bfs_path(g: Graph, src: int, dst: int) -> Optional[np.ndarray]:
+    prev = np.full(g.n, -1, np.int64)
+    prev[src] = src
+    q = deque([int(src)])
+    while q:
+        u = q.popleft()
+        if u == dst:
+            break
+        for v in g.neighbors[u, : g.degrees[u]]:
+            v = int(v)
+            if prev[v] < 0:
+                prev[v] = u
+                q.append(v)
+    if prev[dst] < 0:
+        return None
+    path = [int(dst)]
+    while path[-1] != src:
+        path.append(int(prev[path[-1]]))
+    return np.asarray(path[::-1], np.int32)
+
+
+def route_table(g: Graph, pairs: np.ndarray) -> list[Route]:
+    """Routes for each (u, v) pair (used to precompute overlay-edge costs)."""
+    return [route_to_node(g, int(u), int(v)) for u, v in pairs]

@@ -1,0 +1,193 @@
+"""Synchronous multiscale gossip — the TPU-native production fast path.
+
+The asynchronous single-pair simulation (`multiscale.py`) is faithful to
+the paper but hostile to the MXU.  Here each level's gossip is executed
+as synchronous rounds of doubly-stochastic mixing,
+
+    x_cells <- W_cells^R @ x_cells      (all cells batched),
+
+via the `cell_mixing` Pallas kernel (DESIGN.md §3).  Expected-value
+equivalence with asynchronous pairwise gossip is standard (Boyd et al.);
+message accounting per synchronous round is 2 transmissions per base
+edge (or 2*hops per overlay edge).
+
+Node values may be d-dimensional — this is the entry point used by
+`repro.dist` to prototype gradient-vector averaging at network scale.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from .gossip import batched_graphs
+from .multiscale import _OverlayGraph, _connect_components  # shared topology logic
+from .partition import build_partition
+from .rgg import Graph, induced_subgraph
+from .routing import route_to_node
+
+__all__ = ["SyncMultiscaleResult", "synchronous_multiscale"]
+
+
+@dataclasses.dataclass
+class SyncMultiscaleResult:
+    x_final: np.ndarray     # (n, d)
+    messages: int
+    rounds_per_level: list[tuple[int, int]]  # (level, rounds)
+
+    def error(self, x0: np.ndarray) -> float:
+        avg = x0.mean(axis=0, keepdims=True)
+        return float(
+            np.linalg.norm(self.x_final - avg) / max(np.linalg.norm(x0), 1e-30)
+        )
+
+
+def _mix_until(w, x, mask, counts, eps, max_rounds, chunk, kernel_kwargs):
+    """Apply W repeatedly (chunked) until every cell is within eps of its
+    mean. Returns (x, rounds)."""
+    from repro.kernels.cell_mixing import cell_mixing
+
+    live = mask[..., None].astype(np.float32)
+    mean = (x * live).sum(1, keepdims=True) / np.maximum(
+        live.sum(1, keepdims=True), 1.0
+    )
+    tol = eps * np.maximum(
+        np.sqrt(((x * live) ** 2).sum((1, 2))), 1e-30
+    )
+    rounds = 0
+    cur = x
+    while rounds < max_rounds:
+        err = np.sqrt((((cur - mean) * live) ** 2).sum((1, 2)))
+        if (err <= tol).all():
+            break
+        cur = np.asarray(cell_mixing(w, cur, rounds=chunk, **kernel_kwargs))
+        rounds += chunk
+    return cur, rounds
+
+
+def synchronous_multiscale(
+    g: Graph,
+    x0: np.ndarray,
+    *,
+    eps: float = 1e-4,
+    k: Optional[int] = None,
+    a: float = 2.0 / 3.0,
+    cell_max: float = 8.0,
+    chunk: int = 8,
+    max_rounds: int = 4096,
+    use_pallas: bool = False,
+    interpret: bool = False,
+) -> SyncMultiscaleResult:
+    """Weighted (exact-mass) multiscale averaging with synchronous mixing.
+
+    x0 may be (n,) scalars or (n, d) vectors (gradient prototyping).
+    """
+    from repro.kernels.cell_mixing import mixing_matrix
+
+    x0 = np.asarray(x0, np.float32)
+    if x0.ndim == 1:
+        x0 = x0[:, None]
+    n, d = x0.shape
+    part = build_partition(n, k=k, a=a, cell_max=cell_max)
+    K = part.k
+    kernel_kwargs = dict(use_pallas=use_pallas, interpret=interpret)
+    messages = 0
+    rounds_log = []
+
+    # ---- finest level ----
+    cell_of_node = part.cell_of(g.coords, K)
+    present = np.unique(cell_of_node)
+    subgraphs, sub_ids = [], []
+    for c in present:
+        sg, ids = induced_subgraph(g, np.where(cell_of_node == c)[0])
+        subgraphs.append(sg)
+        sub_ids.append(ids)
+    neighbors, degrees, n_nodes, mask = batched_graphs(subgraphs)
+    w = mixing_matrix(neighbors, degrees, n_nodes)
+    B, C = mask.shape
+    # channels: [w*x (d), w] for exact-mass fusion
+    xb = np.zeros((B, C, d + 1), np.float32)
+    for b, ids in enumerate(sub_ids):
+        xb[b, : len(ids), :d] = x0[ids]
+        xb[b, : len(ids), d] = 1.0
+    edges_per_graph = np.array([sg.num_edges for sg in subgraphs])
+    xb, rounds = _mix_until(w, xb, mask, n_nodes, eps, max_rounds, chunk, kernel_kwargs)
+    messages += int(2 * edges_per_graph.sum() * rounds)
+    rounds_log.append((K, rounds))
+
+    # representatives: first node of each cell (synchronous variant uses
+    # deterministic election); promote total cell mass
+    rep_node = np.array([ids[0] for ids in sub_ids])
+    rep_val = np.stack(
+        [xb[b, 0] * len(sub_ids[b]) for b in range(B)]
+    )  # (B, d+1): (sum wx, sum w)
+
+    cur_cells, cur_level = present, K
+    while cur_level > 1:
+        j = cur_level - 1
+        parents = part.parent_cell(cur_level, cur_cells)
+        all_edges = part.child_grid_edges(j)
+        order = np.argsort(parents, kind="stable")
+        uniq_parents, starts = np.unique(parents[order], return_index=True)
+        groups = np.split(order, starts[1:])
+        overlay, members, hop_sums = [], [], []
+        for grp in groups:
+            cells_here = cur_cells[grp]
+            local = {int(c): i for i, c in enumerate(cells_here)}
+            edges = [
+                (local[int(u)], local[int(v)])
+                for u, v in all_edges
+                if int(u) in local and int(v) in local
+            ]
+            edges = _connect_components(edges, g.coords[rep_node[grp]], len(grp))
+            hops = [
+                max(1, route_to_node(g, int(rep_node[grp[u]]), int(rep_node[grp[v]])).hops)
+                for u, v in edges
+            ]
+            overlay.append(
+                _OverlayGraph(
+                    len(grp),
+                    np.asarray(edges, np.int64).reshape(-1, 2),
+                    np.asarray(hops, np.int64),
+                )
+            )
+            members.append(grp)
+            hop_sums.append(sum(hops))
+        neighbors, degrees, n_nodes, mask = batched_graphs(overlay)
+        w = mixing_matrix(neighbors, degrees, n_nodes)
+        Bg, Cg = mask.shape
+        xb = np.zeros((Bg, Cg, d + 1), np.float32)
+        for b, grp in enumerate(members):
+            xb[b, : len(grp)] = rep_val[grp]
+        xb, rounds = _mix_until(
+            w, xb, mask, n_nodes, eps, max_rounds, chunk, kernel_kwargs
+        )
+        messages += int(2 * np.asarray(hop_sums).sum() * rounds)
+        rounds_log.append((j, rounds))
+        if j == 1:
+            final_cells, final_vals = cur_cells, xb[0, : len(members[0])]
+            final_members = members[0]
+            break
+        rep_node = np.array([int(rep_node[grp[0]]) for grp in members])
+        rep_val = np.stack(
+            [xb[b, 0] * len(members[b]) for b in range(len(members))]
+        )
+        cur_cells, cur_level = uniq_parents, j
+
+    # dissemination
+    x_final = np.zeros((n, d), np.float32)
+    if K == 1:
+        for b, ids in enumerate(sub_ids):
+            est = xb[b, : len(ids), :d] / np.maximum(xb[b, : len(ids), d:], 1e-30)
+            x_final[ids] = est
+    else:
+        lvl2 = part.cell_of(g.coords, 2)
+        for pos, grp_idx in enumerate(final_members):
+            c = int(final_cells[grp_idx])
+            est = final_vals[pos, :d] / max(float(final_vals[pos, d]), 1e-30)
+            x_final[lvl2 == c] = est
+        messages += n
+    return SyncMultiscaleResult(
+        x_final=x_final, messages=messages, rounds_per_level=rounds_log
+    )

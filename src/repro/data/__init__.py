@@ -1,0 +1,3 @@
+from .pipeline import MemmapCorpus, SyntheticLM, shard_batch, write_synthetic_corpus
+
+__all__ = ["MemmapCorpus", "SyntheticLM", "shard_batch", "write_synthetic_corpus"]

@@ -1,0 +1,11 @@
+from .kernel import cell_mixing_pallas
+from .ops import cell_mixing, mixing_matrix, pad_mixing
+from .ref import cell_mixing_ref
+
+__all__ = [
+    "cell_mixing",
+    "cell_mixing_pallas",
+    "cell_mixing_ref",
+    "mixing_matrix",
+    "pad_mixing",
+]

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the cell mixing kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["cell_mixing_ref"]
+
+
+def cell_mixing_ref(w: jax.Array, x: jax.Array, *, rounds: int = 1) -> jax.Array:
+    """y[b] = W[b]^rounds @ x[b], accumulated in fp32."""
+    y = x.astype(jnp.float32)
+    wf = w.astype(jnp.float32)
+    for _ in range(rounds):
+        y = jnp.einsum("bij,bjd->bid", wf, y)
+    return y.astype(x.dtype)

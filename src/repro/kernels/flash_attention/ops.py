@@ -1,0 +1,65 @@
+"""Jitted entry point for flash attention with padding + dispatch.
+
+`use_pallas=True` targets the TPU kernel (validated under
+interpret=True on CPU); `use_pallas=False` uses the jnp oracle — the
+model code instead uses `repro.models.attention.chunked_attention` as
+its XLA path for long sequences (same math, lax.scan over KV blocks).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_pallas
+from .ref import attention_ref
+
+__all__ = ["flash_attention"]
+
+
+def _round_up(v: int, mult: int) -> int:
+    return ((v + mult - 1) // mult) * mult
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "causal", "window", "softcap", "scale",
+        "block_q", "block_k", "use_pallas", "interpret",
+    ),
+)
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    scale: Optional[float] = None,
+    block_q: int = 512,
+    block_k: int = 512,
+    use_pallas: bool = True,
+    interpret: bool = False,
+) -> jax.Array:
+    if not use_pallas:
+        return attention_ref(
+            q, k, v, causal=causal, window=window, softcap=softcap, scale=scale
+        )
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Sk, Dv = v.shape
+    bq, bk = min(block_q, _round_up(Sq, 128)), min(block_k, _round_up(Sk, 128))
+    sq_p, sk_p = _round_up(Sq, bq), _round_up(Sk, bk)
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, sq_p - Sq), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, sk_p - Sk), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, sk_p - Sk), (0, 0)))
+    # kv_len masking inside the kernel hides the padded KV tail; padded
+    # query rows compute garbage that is cropped here
+    out = flash_attention_pallas(
+        qp, kp, vp,
+        causal=causal, window=window, softcap=softcap, scale=scale,
+        block_q=bq, block_k=bk, kv_len=Sk, interpret=interpret,
+    )
+    return out[:, :, :Sq, :]

@@ -1,0 +1,5 @@
+from .kernel import rwkv6_pallas
+from .ops import rwkv6_wkv
+from .ref import rwkv6_ref
+
+__all__ = ["rwkv6_pallas", "rwkv6_ref", "rwkv6_wkv"]

@@ -1,0 +1,64 @@
+"""Jitted entry point for the RWKV-6 wkv kernel with padding/dispatch."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import rwkv6_pallas
+from .ref import rwkv6_ref
+
+__all__ = ["rwkv6_wkv"]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_t", "use_pallas", "interpret", "unroll")
+)
+def rwkv6_wkv(
+    r: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    w: jax.Array,
+    u: jax.Array,
+    *,
+    block_t: int = 256,
+    use_pallas: bool = True,
+    interpret: bool = False,
+    unroll: bool = False,
+) -> jax.Array:
+    """RWKV-6 wkv over (BH, T, N) streams; u is the (BH, N) bonus."""
+    if not use_pallas:
+        # time-chunked + remat: a bare scan saves the (BH, N, N) state
+        # at EVERY timestep for backward — 134 GiB/chip on the rwkv6-3b
+        # train cell (§Perf M11); chunking saves it per chunk only
+        BH, T, N = r.shape
+        bt = min(block_t, T)
+        if T <= bt or T % bt != 0:
+            return rwkv6_ref(r, k, v, w, u)
+        n = T // bt
+
+        def chunk(s, inp):
+            rc, kc, vc, wc = inp
+            out, s_new = rwkv6_ref(rc, kc, vc, wc, u, s0=s, return_state=True)
+            return s_new, out
+
+        split = lambda a: a.reshape(BH, n, bt, N).swapaxes(0, 1)
+        s0 = jnp.zeros((BH, N, N), jnp.float32)
+        _, ys = jax.lax.scan(
+            jax.checkpoint(chunk), s0, (split(r), split(k), split(v), split(w)),
+            unroll=True if unroll else 1,
+        )
+        return ys.swapaxes(0, 1).reshape(BH, T, N)
+    BH, T, N = r.shape
+    bt = min(block_t, T)
+    pad = (-T) % bt
+    if pad:
+        # padded steps: w=1 (no decay), k=0 (no state write) — outputs
+        # beyond T are cropped
+        r = jnp.pad(r, ((0, 0), (0, pad), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0)))
+        w = jnp.pad(w, ((0, 0), (0, pad), (0, 0)), constant_values=1.0)
+    out = rwkv6_pallas(r, k, v, w, u, block_t=bt, interpret=interpret)
+    return out[:, :T, :]

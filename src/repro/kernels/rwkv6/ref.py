@@ -1,0 +1,43 @@
+"""Pure-jnp oracle for the RWKV-6 wkv recurrence (lax.scan, fp32)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["rwkv6_ref"]
+
+
+def rwkv6_ref(
+    r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array, u: jax.Array,
+    s0: jax.Array | None = None, return_state: bool = False,
+):
+    """r/k/v/w: (BH, T, N); u: (BH, N). Returns (BH, T, N) [, final state]."""
+    BH, T, N = r.shape
+    rf, kf, vf, wf = (a.astype(jnp.float32) for a in (r, k, v, w))
+    uf = u.astype(jnp.float32)
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp  # each (BH, N)
+        kv = kt[:, :, None] * vt[:, None, :]              # (BH, N, N)
+        y = jnp.sum(
+            (s + uf[:, :, None] * kv) * rt[:, :, None], axis=1
+        )                                                  # (BH, N)
+        s = wt[:, :, None] * s + kv
+        return s, y
+
+    if s0 is None:
+        s0 = jnp.zeros((BH, N, N), jnp.float32)
+    s_fin, ys = jax.lax.scan(
+        step,
+        s0,
+        (
+            rf.transpose(1, 0, 2),
+            kf.transpose(1, 0, 2),
+            vf.transpose(1, 0, 2),
+            wf.transpose(1, 0, 2),
+        ),
+    )
+    out = ys.transpose(1, 0, 2).astype(r.dtype)
+    if return_state:
+        return out, s_fin
+    return out

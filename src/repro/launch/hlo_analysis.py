@@ -1,0 +1,189 @@
+"""HLO-level analysis for the dry-run roofline.
+
+Two jobs:
+
+1. `collective_bytes(hlo_text, pod_size)` — sum result-shape bytes of
+   every all-gather / all-reduce / reduce-scatter / all-to-all /
+   collective-permute in a compiled module, classified intra- vs
+   cross-pod from replica_groups / source_target_pairs (device order
+   follows the (pod, data, model) mesh: pod = id // pod_size).
+
+2. Scan-body undercounting fix: XLA's cost_analysis counts a while-loop
+   body ONCE regardless of trip count, so a full-depth scan-over-layers
+   module under-reports flops by ~num_layers x.  The dry-run therefore
+   lowers 1-unit and 2-unit UNROLLED depth variants per distinct layer
+   group and extrapolates exactly (`secant_totals`):
+
+      unit_cost = cost(2 units) - cost(1 unit)
+      stem_cost = cost(1 unit) - unit_cost
+      total     = stem_cost + sum_i repeats_i * unit_cost_i
+
+   This is exact for homogeneous stacks (which scan-over-layers
+   guarantees by construction).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+__all__ = ["CollectiveStats", "collective_bytes", "secant_totals", "DTYPE_BYTES"]
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([\d,]*)\]")
+# nested-brace attributes: capture through the LAST inner close-brace
+_GROUPS_RE = re.compile(r"replica_groups=\{(.*?\})\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\]")
+_PAIRS_RE = re.compile(r"source_target_pairs=\{(.*?\})\}")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def _parse_groups(line: str) -> Optional[list[list[int]]]:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        # iota format [G,S]<=[dims...] — groups of S consecutive-ish ids;
+        # reconstruct the id list
+        g, s = int(m.group(1)), int(m.group(2))
+        dims = [int(x) for x in m.group(3).split(",")]
+        total = 1
+        for d in dims:
+            total *= d
+        ids = list(range(total))
+        return [ids[i * s : (i + 1) * s] for i in range(g)]
+    m = _GROUPS_RE.search(line)
+    if m and m.group(1).strip():
+        groups = []
+        for grp in re.findall(r"\{([\d,\s]*)\}", m.group(1)):
+            if grp.strip():
+                groups.append([int(x) for x in grp.replace(" ", "").split(",")])
+        return groups or None
+    return None
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    total_bytes: int = 0
+    cross_pod_bytes: int = 0
+    by_kind: dict = dataclasses.field(default_factory=dict)
+    count: int = 0
+
+    def add(self, kind: str, nbytes: int, cross: bool):
+        self.total_bytes += nbytes
+        if cross:
+            self.cross_pod_bytes += nbytes
+        self.by_kind[kind] = self.by_kind.get(kind, 0) + nbytes
+        self.count += 1
+
+    def asdict(self) -> dict:
+        return {
+            "total_bytes": self.total_bytes,
+            "cross_pod_bytes": self.cross_pod_bytes,
+            "by_kind": dict(self.by_kind),
+            "count": self.count,
+        }
+
+    def __sub__(self, other: "CollectiveStats") -> "CollectiveStats":
+        out = CollectiveStats(
+            total_bytes=self.total_bytes - other.total_bytes,
+            cross_pod_bytes=self.cross_pod_bytes - other.cross_pod_bytes,
+            by_kind={
+                k: self.by_kind.get(k, 0) - other.by_kind.get(k, 0)
+                for k in set(self.by_kind) | set(other.by_kind)
+            },
+            count=self.count - other.count,
+        )
+        return out
+
+    def scaled(self, f: float) -> "CollectiveStats":
+        return CollectiveStats(
+            total_bytes=int(self.total_bytes * f),
+            cross_pod_bytes=int(self.cross_pod_bytes * f),
+            by_kind={k: int(v * f) for k, v in self.by_kind.items()},
+            count=int(self.count * f),
+        )
+
+    def __add__(self, other: "CollectiveStats") -> "CollectiveStats":
+        return CollectiveStats(
+            total_bytes=self.total_bytes + other.total_bytes,
+            cross_pod_bytes=self.cross_pod_bytes + other.cross_pod_bytes,
+            by_kind={
+                k: self.by_kind.get(k, 0) + other.by_kind.get(k, 0)
+                for k in set(self.by_kind) | set(other.by_kind)
+            },
+            count=self.count + other.count,
+        )
+
+
+def collective_bytes(hlo_text: str, pod_size: int = 256) -> CollectiveStats:
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        kind = None
+        for k in _COLLECTIVES:
+            if re.search(rf"= [^=]*\b{k}(-start|-done)?\(", stripped):
+                kind = k
+                break
+        if kind is None or f"{kind}-done" in stripped:
+            continue  # count the -start, skip the paired -done
+        lhs = stripped.split(f" {kind}", 1)[0]
+        nbytes = _shape_bytes(lhs)
+        if nbytes == 0:
+            continue
+        cross = False
+        pairs = _PAIRS_RE.search(stripped)
+        if pairs:
+            for a, b in re.findall(r"\{(\d+),(\d+)\}", pairs.group(1)):
+                if int(a) // pod_size != int(b) // pod_size:
+                    cross = True
+                    break
+        else:
+            groups = _parse_groups(stripped)
+            if groups:
+                for grp in groups:
+                    if len({i // pod_size for i in grp}) > 1:
+                        cross = True
+                        break
+            else:
+                cross = True  # global (no groups attr) => crosses pods
+        stats.add(kind, nbytes, cross)
+    return stats
+
+
+def secant_totals(cost_1u: dict, cost_2u: dict, repeats: int) -> dict:
+    """Extrapolate per-step totals from 1-unit / 2-unit depth variants.
+
+    cost dicts carry scalar-addable entries (flops, bytes, CollectiveStats).
+    Returns stem + repeats * unit for every key.
+    """
+    out = {}
+    for k in cost_1u:
+        a, b = cost_1u[k], cost_2u[k]
+        if isinstance(a, CollectiveStats):
+            unit = b - a
+            stem = a - unit
+            out[k] = stem + unit.scaled(repeats)
+        else:
+            unit = b - a
+            out[k] = (a - unit) + repeats * unit
+    return out

@@ -1,0 +1,11 @@
+from .config import ModelConfig
+from .model import Transformer, decode_step, forward, init_cache, loss_fn
+
+__all__ = [
+    "ModelConfig",
+    "Transformer",
+    "decode_step",
+    "forward",
+    "init_cache",
+    "loss_fn",
+]

@@ -1,0 +1,202 @@
+"""Self-contained optimizers (no optax dependency).
+
+* adamw     — default for <=100B-param archs; fp32 moments.
+* adafactor — factored second moment, optional bf16 momentum; the
+  memory policy for the giant MoE archs (DESIGN.md §6): state is
+  O(rows+cols) per matrix instead of O(rows*cols).
+* sgdm      — plain momentum SGD (used by decentralized-gossip examples
+  where per-replica state must stay cheap).
+
+All follow the (init_fn, update_fn) convention:
+  state = init_fn(params)
+  updates, state = update_fn(grads, state, params)
+  params = apply_updates(params, updates)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "Optimizer", "adamw", "adafactor", "sgdm",
+    "apply_updates", "global_norm", "clip_by_global_norm",
+    "cosine_schedule", "make_optimizer",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable  # (grads, state, params, lr) -> (updates, state)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u.astype(p.dtype)), params, updates)
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(tree))
+    )
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    n = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(n, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), n
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = 0.5 * base_lr * (1.0 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+# ------------------------------- adamw --------------------------------
+
+
+def adamw(b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.0) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params, lr):
+        c = state["count"] + 1
+        cf = c.astype(jnp.float32)
+        m = jax.tree.map(
+            lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+            state["m"], grads,
+        )
+        v = jax.tree.map(
+            lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state["v"], grads,
+        )
+        mh = jax.tree.map(lambda m_: m_ / (1 - b1**cf), m)
+        vh = jax.tree.map(lambda v_: v_ / (1 - b2**cf), v)
+        upd = jax.tree.map(
+            lambda mh_, vh_, p: -lr * (
+                mh_ / (jnp.sqrt(vh_) + eps) + weight_decay * p.astype(jnp.float32)
+            ),
+            mh, vh, params,
+        )
+        return upd, {"m": m, "v": v, "count": c}
+
+    return Optimizer(init, update)
+
+
+# ----------------------------- adafactor ------------------------------
+
+
+def adafactor(
+    decay: float = 0.8,
+    eps: float = 1e-30,
+    clip_threshold: float = 1.0,
+    momentum: bool = False,
+    momentum_dtype=jnp.bfloat16,
+) -> Optimizer:
+    """Factored RMS (Shazeer & Stern 2018). For ndim>=2 params keep only
+    row/col second-moment vectors over the trailing two dims."""
+
+    def _factored(p):
+        return p.ndim >= 2
+
+    def init(params):
+        def v_state(p):
+            if _factored(p):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        st = {
+            "v": jax.tree.map(v_state, params, is_leaf=lambda x: hasattr(x, "shape")),
+            "count": jnp.zeros((), jnp.int32),
+        }
+        if momentum:
+            st["m"] = jax.tree.map(lambda p: jnp.zeros(p.shape, momentum_dtype), params)
+        return st
+
+    def update(grads, state, params, lr):
+        c = state["count"] + 1
+        beta = 1.0 - (c.astype(jnp.float32) + 1.0) ** (-decay)
+
+        def upd_one(g, v):
+            gf = g.astype(jnp.float32)
+            g2 = jnp.square(gf) + eps
+            if "vr" in v:
+                vr = beta * v["vr"] + (1 - beta) * g2.mean(axis=-1)
+                vc = beta * v["vc"] + (1 - beta) * g2.mean(axis=-2)
+                denom = jnp.maximum(vr.mean(axis=-1, keepdims=True), eps)
+                rfac = jax.lax.rsqrt(vr / denom)[..., None]
+                cfac = jax.lax.rsqrt(vc)[..., None, :].swapaxes(-1, -2) if False else (
+                    jax.lax.rsqrt(vc)[..., None, :]
+                )
+                u = gf * rfac * cfac
+                nv = {"vr": vr, "vc": vc}
+            else:
+                vv = beta * v["v"] + (1 - beta) * g2
+                u = gf * jax.lax.rsqrt(vv)
+                nv = {"v": vv}
+            # update clipping (RMS <= clip_threshold)
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-30)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            return u, nv
+
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_v = treedef.flatten_up_to(state["v"])
+        outs = [upd_one(g, v) for g, v in zip(flat_g, flat_v)]
+        upd = jax.tree.unflatten(treedef, [-lr * o[0] for o in outs])
+        new_v = jax.tree.unflatten(treedef, [o[1] for o in outs])
+        new_state = {"v": new_v, "count": c}
+        if momentum:
+            m = jax.tree.map(
+                lambda m_, u_: (0.9 * m_.astype(jnp.float32) + u_).astype(m_.dtype),
+                state["m"], upd,
+            )
+            upd = jax.tree.map(lambda m_: m_.astype(jnp.float32), m)
+            new_state["m"] = m
+        return upd, new_state
+
+    return Optimizer(init, update)
+
+
+# -------------------------------- sgdm --------------------------------
+
+
+def sgdm(momentum: float = 0.9) -> Optimizer:
+    def init(params):
+        return {
+            "m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params, lr):
+        m = jax.tree.map(
+            lambda m_, g: momentum * m_ + g.astype(jnp.float32), state["m"], grads
+        )
+        upd = jax.tree.map(lambda m_: -lr * m_, m)
+        return upd, {"m": m, "count": state["count"] + 1}
+
+    return Optimizer(init, update)
+
+
+def make_optimizer(name: str, **kw) -> Optimizer:
+    if name == "adamw":
+        return adamw(**kw)
+    if name == "adafactor":
+        return adafactor(**kw)
+    if name == "sgdm":
+        return sgdm(**kw)
+    raise ValueError(name)

@@ -1,0 +1,73 @@
+"""Batched decode serving.
+
+`make_serve_step(cfg)` builds the single-token step the decode_32k /
+long_500k dry-run cells lower; `Generator` drives it for the example
+applications (greedy or temperature sampling, batched requests with
+per-slot stop handling — a minimal continuous-batching core).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import decode_step, init_cache
+from repro.models.config import ModelConfig
+
+__all__ = ["make_serve_step", "Generator"]
+
+
+def make_serve_step(cfg: ModelConfig, dp=("data",)) -> Callable:
+    def step(params, cache, tokens):
+        return decode_step(params, cfg, cache, tokens, dp=dp)
+    return step
+
+
+@dataclasses.dataclass
+class Generator:
+    cfg: ModelConfig
+    params: dict
+    max_len: int = 256
+    temperature: float = 0.0
+    eos_id: int = 1
+
+    def __post_init__(self):
+        self._step = jax.jit(make_serve_step(self.cfg, dp=None))
+
+    def generate(
+        self,
+        prompts: np.ndarray,          # (B, P) int32 prompt tokens
+        steps: int,
+        seed: int = 0,
+        frames: Optional[jax.Array] = None,
+    ) -> np.ndarray:
+        B, P = prompts.shape
+        cache = init_cache(
+            self.params, self.cfg, batch=B, max_len=self.max_len, frames=frames,
+            dp=None,
+        )
+        key = jax.random.PRNGKey(seed)
+        # prefill by teacher-forcing the prompt through decode steps
+        logits = None
+        for t in range(P):
+            logits, cache = self._step(self.params, cache, jnp.asarray(prompts[:, t]))
+        out = []
+        done = np.zeros(B, bool)
+        tok = self._sample(logits, key)
+        for t in range(steps):
+            out.append(np.asarray(tok))
+            done |= np.asarray(tok) == self.eos_id
+            if done.all():
+                break
+            key, sub = jax.random.split(key)
+            logits, cache = self._step(self.params, cache, tok)
+            tok = self._sample(logits, sub)
+        return np.stack(out, axis=1)
+
+    def _sample(self, logits, key):
+        if self.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(key, logits / self.temperature).astype(jnp.int32)

@@ -1,0 +1,12 @@
+from .checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from .step import (
+    consensus_distance, init_decentralized_state, init_train_state,
+    make_decentralized_step, make_train_step,
+)
+from .trainer import Trainer
+
+__all__ = [
+    "Trainer", "consensus_distance", "init_decentralized_state",
+    "init_train_state", "latest_step", "make_decentralized_step",
+    "make_train_step", "restore_checkpoint", "save_checkpoint",
+]

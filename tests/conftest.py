@@ -1,0 +1,32 @@
+"""Shared test configuration.
+
+NOTE: XLA_FLAGS / device-count forcing is deliberately NOT set here —
+smoke tests and benchmarks must see the real single CPU device.  The
+multi-device distribution tests spawn subprocesses that set
+XLA_FLAGS=--xla_force_host_platform_device_count=<N> before importing
+jax (see tests/test_dist_multidevice.py).
+"""
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, settings
+
+# Single-core CPU container: keep property tests small and undeadlined.
+settings.register_profile(
+    "ci",
+    max_examples=15,
+    deadline=None,
+    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+)
+settings.load_profile("ci")
+
+
+@pytest.fixture(scope="session")
+def rgg500():
+    from repro.core import random_geometric_graph
+
+    return random_geometric_graph(500, seed=7)
+
+
+@pytest.fixture(scope="session")
+def x0_500():
+    return np.random.default_rng(3).normal(0.0, 1.0, 500)

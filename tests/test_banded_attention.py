@@ -1,0 +1,46 @@
+"""Banded local attention vs reference (sliding-window correctness)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import attention_ref
+from repro.models.attention import banded_local_attention, chunked_attention
+
+
+@pytest.mark.parametrize("S,window,block", [
+    (256, 64, 64), (256, 96, 64), (384, 128, 128), (200, 64, 64),
+])
+def test_banded_matches_reference(S, window, block):
+    rng = np.random.default_rng(S + window)
+    B, H, Hkv, D = 2, 4, 2, 32
+    q = jnp.asarray(rng.normal(size=(B, H, S, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, Hkv, S, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, Hkv, S, D)), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    got = banded_local_attention(
+        q, k, v, pos, pos, window=window, softcap=None,
+        scale=D ** -0.5, block=block,
+    )
+    want = attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5
+    )
+
+
+def test_banded_matches_chunked_with_softcap():
+    rng = np.random.default_rng(0)
+    B, H, S, D, w = 1, 2, 256, 32, 64
+    q = jnp.asarray(rng.normal(size=(B, H, S, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, H, S, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, H, S, D)), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    banded = banded_local_attention(
+        q, k, v, pos, pos, window=w, softcap=30.0, scale=D ** -0.5, block=64
+    )
+    chunked = chunked_attention(
+        q, k, v, pos, pos, causal=True, window=w, softcap=30.0,
+        scale=D ** -0.5, chunk=64,
+    )
+    np.testing.assert_allclose(
+        np.asarray(banded), np.asarray(chunked), rtol=2e-5, atol=2e-5
+    )

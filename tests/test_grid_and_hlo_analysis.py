@@ -1,0 +1,74 @@
+"""(1) Paper §VIII: "the results translate directly to grids" — run
+multiscale gossip on a 2-D lattice.  (2) Unit tests for the HLO
+collective parser the roofline analysis depends on."""
+import numpy as np
+import pytest
+
+from repro.core import grid_graph, multiscale_gossip, path_averaging
+from repro.launch.hlo_analysis import CollectiveStats, collective_bytes
+
+
+def test_multiscale_on_grid_topology():
+    g = grid_graph(24)  # 576-node lattice in the unit square
+    x0 = np.random.default_rng(0).normal(0, 1, g.n)
+    res = multiscale_gossip(g, x0, eps=1e-4, seed=0, weighted=True)
+    assert res.error(x0) <= 2e-3
+    pa = path_averaging(g, x0, eps=1e-4, seed=0)
+    assert res.messages < pa.messages  # the paper's claim holds on grids
+
+
+def test_multiscale_on_jittered_grid():
+    g = grid_graph(20, jitter=0.2, seed=3)
+    x0 = np.random.default_rng(1).normal(0, 1, g.n)
+    res = multiscale_gossip(g, x0, eps=1e-4, seed=1, weighted=True)
+    assert res.error(x0) <= 2e-3
+
+
+# --------------------------- HLO parsing -------------------------------
+
+HLO_SAMPLE = """
+ENTRY %main {
+  %ar = f32[1024,256]{1,0} all-reduce(%x), replica_groups={{0,1,2,3},{4,5,6,7}}, to_apply=%add
+  %ag = bf16[64,128]{1,0} all-gather(%y), replica_groups=[2,4]<=[8], dimensions={0}
+  %cp = f32[32]{0} collective-permute(%z), source_target_pairs={{0,1},{1,2},{7,0}}
+  %rs = f32[512]{0} reduce-scatter(%w), replica_groups={{0,1,2,3,4,5,6,7}}, to_apply=%add
+  %dot = f32[128,128]{1,0} dot(%a, %b)
+}
+"""
+
+
+def test_collective_bytes_counts_and_kinds():
+    stats = collective_bytes(HLO_SAMPLE, pod_size=4)
+    assert stats.count == 4  # dot is not a collective
+    assert stats.by_kind["all-reduce"] == 1024 * 256 * 4
+    assert stats.by_kind["all-gather"] == 64 * 128 * 2
+    assert stats.by_kind["collective-permute"] == 32 * 4
+    assert stats.by_kind["reduce-scatter"] == 512 * 4
+
+
+def test_cross_pod_classification():
+    stats = collective_bytes(HLO_SAMPLE, pod_size=4)
+    # all-reduce groups {0..3},{4..7} stay inside pods of 4; the permute
+    # pair {7,0} and the global reduce-scatter cross pods
+    expected_cross = 32 * 4 + 512 * 4
+    assert stats.cross_pod_bytes == expected_cross
+
+
+def test_stats_arithmetic():
+    a = collective_bytes(HLO_SAMPLE, pod_size=4)
+    two = a + a
+    assert two.total_bytes == 2 * a.total_bytes
+    diff = two - a
+    assert diff.total_bytes == a.total_bytes
+    scaled = a.scaled(3)
+    assert scaled.cross_pod_bytes == 3 * a.cross_pod_bytes
+
+
+def test_start_done_counted_once():
+    hlo = """
+  %s = f32[256]{0} all-gather-start(%x), replica_groups={{0,1}}
+  %d = f32[256]{0} all-gather-done(%s)
+"""
+    stats = collective_bytes(hlo, pod_size=2)
+    assert stats.count == 1
+    assert stats.total_bytes == 256 * 4

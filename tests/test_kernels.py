@@ -1,0 +1,195 @@
+"""Per-kernel allclose tests vs the pure-jnp oracles (interpret mode on
+CPU; the BlockSpecs target TPU v5e VMEM)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.cell_mixing import (
+    cell_mixing, cell_mixing_pallas, cell_mixing_ref, mixing_matrix, pad_mixing,
+)
+from repro.kernels.flash_attention import attention_ref, flash_attention
+from repro.kernels.rwkv6 import rwkv6_ref, rwkv6_wkv
+
+# ----------------------------- cell mixing -----------------------------
+
+
+def _random_mixing(rng, B, m):
+    """Random symmetric doubly-stochastic matrices (Metropolis on a
+    random graph)."""
+    w = np.zeros((B, m, m), np.float32)
+    for b in range(B):
+        adj = rng.uniform(size=(m, m)) < 0.4
+        adj = np.triu(adj, 1)
+        adj = adj | adj.T
+        deg = adj.sum(1)
+        for i in range(m):
+            for j in range(m):
+                if adj[i, j]:
+                    w[b, i, j] = 1.0 / (1.0 + max(deg[i], deg[j]))
+        np.fill_diagonal(w[b], 1.0 - w[b].sum(1))
+    return w
+
+
+@pytest.mark.parametrize("B,m,d", [(1, 8, 128), (3, 16, 256), (2, 40, 384)])
+@pytest.mark.parametrize("rounds", [1, 4])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_cell_mixing_matches_ref(B, m, d, rounds, dtype):
+    rng = np.random.default_rng(B * 100 + m + rounds)
+    w = jnp.asarray(_random_mixing(rng, B, m))
+    x = jnp.asarray(rng.normal(size=(B, m, d)), dtype)
+    got = cell_mixing(w, x, rounds=rounds, use_pallas=True, interpret=True)
+    want = cell_mixing(w, x, rounds=rounds, use_pallas=False)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=tol, atol=tol,
+    )
+
+
+def test_cell_mixing_preserves_mass_and_consensus():
+    rng = np.random.default_rng(0)
+    B, m, d = 2, 16, 128
+    w = jnp.asarray(_random_mixing(rng, B, m))
+    x = jnp.asarray(rng.normal(size=(B, m, d)), jnp.float32)
+    y = cell_mixing(w, x, rounds=64, use_pallas=True, interpret=True)
+    # doubly stochastic: per-cell column sums (mass) preserved
+    np.testing.assert_allclose(
+        np.asarray(y.sum(1)), np.asarray(x.sum(1)), rtol=1e-4, atol=1e-4
+    )
+    # many rounds => consensus at the cell average
+    np.testing.assert_allclose(
+        np.asarray(y), np.asarray(x.mean(1, keepdims=True) * jnp.ones_like(x)),
+        rtol=1e-2, atol=1e-2,
+    )
+
+
+def test_mixing_matrix_from_graph_is_doubly_stochastic():
+    from repro.core import batched_graphs, random_geometric_graph
+
+    g = random_geometric_graph(40, seed=5)
+    neighbors, degrees, n_nodes, _ = batched_graphs([g])
+    w = mixing_matrix(neighbors, degrees, n_nodes)
+    np.testing.assert_allclose(w.sum(1), 1.0, atol=1e-6)
+    np.testing.assert_allclose(w.sum(2), 1.0, atol=1e-6)
+    np.testing.assert_allclose(w[0], w[0].T, atol=1e-7)
+
+
+def test_pad_mixing_identity_extension():
+    rng = np.random.default_rng(1)
+    w = jnp.asarray(_random_mixing(rng, 1, 5))
+    x = jnp.asarray(rng.normal(size=(1, 5, 7)), jnp.float32)
+    wp, xp, (m, d) = pad_mixing(w, x)
+    assert wp.shape[1] % 8 == 0 and xp.shape[2] % 128 == 0
+    np.testing.assert_allclose(np.asarray(wp.sum(1)), 1.0, atol=1e-6)
+
+
+# --------------------------- flash attention ---------------------------
+
+
+@pytest.mark.parametrize(
+    "B,Hq,Hkv,S,D",
+    [(1, 2, 2, 128, 64), (2, 4, 2, 256, 64), (1, 8, 1, 128, 128)],
+)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_causal(B, Hq, Hkv, S, D, dtype):
+    rng = np.random.default_rng(S + Hq)
+    q = jnp.asarray(rng.normal(size=(B, Hq, S, D)), dtype)
+    k = jnp.asarray(rng.normal(size=(B, Hkv, S, D)), dtype)
+    v = jnp.asarray(rng.normal(size=(B, Hkv, S, D)), dtype)
+    got = flash_attention(
+        q, k, v, causal=True, block_q=128, block_k=128,
+        use_pallas=True, interpret=True,
+    )
+    want = attention_ref(q, k, v, causal=True)
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=tol, atol=tol,
+    )
+
+
+@pytest.mark.parametrize("window", [64, 128])
+def test_flash_attention_sliding_window(window):
+    rng = np.random.default_rng(window)
+    B, H, S, D = 1, 2, 384, 64
+    q, k, v = (jnp.asarray(rng.normal(size=(B, H, S, D)), jnp.float32) for _ in range(3))
+    got = flash_attention(
+        q, k, v, causal=True, window=window, block_q=128, block_k=128,
+        use_pallas=True, interpret=True,
+    )
+    want = attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_softcap():
+    rng = np.random.default_rng(9)
+    B, H, S, D = 1, 2, 256, 64
+    q, k, v = (jnp.asarray(rng.normal(size=(B, H, S, D)), jnp.float32) for _ in range(3))
+    got = flash_attention(
+        q, k, v, causal=True, softcap=30.0, block_q=128, block_k=128,
+        use_pallas=True, interpret=True,
+    )
+    want = attention_ref(q, k, v, causal=True, softcap=30.0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_unaligned_seq_padding():
+    rng = np.random.default_rng(11)
+    B, H, S, D = 1, 2, 200, 64  # not a block multiple
+    q, k, v = (jnp.asarray(rng.normal(size=(B, H, S, D)), jnp.float32) for _ in range(3))
+    got = flash_attention(
+        q, k, v, causal=True, block_q=128, block_k=128,
+        use_pallas=True, interpret=True,
+    )
+    want = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_noncausal():
+    rng = np.random.default_rng(13)
+    B, H, S, D = 1, 2, 256, 64
+    q, k, v = (jnp.asarray(rng.normal(size=(B, H, S, D)), jnp.float32) for _ in range(3))
+    got = flash_attention(
+        q, k, v, causal=False, block_q=128, block_k=128,
+        use_pallas=True, interpret=True,
+    )
+    want = attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+# ------------------------------- rwkv6 --------------------------------
+
+
+@pytest.mark.parametrize("BH,T,N", [(2, 64, 32), (1, 130, 64), (3, 96, 16)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rwkv6_matches_ref(BH, T, N, dtype):
+    rng = np.random.default_rng(BH * T)
+    r = jnp.asarray(rng.normal(size=(BH, T, N)), dtype)
+    k = jnp.asarray(rng.normal(size=(BH, T, N)) * 0.3, dtype)
+    v = jnp.asarray(rng.normal(size=(BH, T, N)), dtype)
+    w = jnp.asarray(rng.uniform(0.85, 0.999, size=(BH, T, N)), dtype)
+    u = jnp.asarray(rng.normal(size=(BH, N)) * 0.2, dtype)
+    got = rwkv6_wkv(r, k, v, w, u, block_t=64, use_pallas=True, interpret=True)
+    want = rwkv6_ref(r, k, v, w, u)
+    tol = 3e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=tol, atol=tol,
+    )
+
+
+def test_rwkv6_state_streaming_across_blocks():
+    """Splitting T across grid blocks must not reset the state."""
+    rng = np.random.default_rng(21)
+    BH, T, N = 1, 128, 32
+    args = [
+        jnp.asarray(rng.normal(size=(BH, T, N)), jnp.float32) for _ in range(3)
+    ]
+    w = jnp.asarray(rng.uniform(0.9, 0.999, size=(BH, T, N)), jnp.float32)
+    u = jnp.asarray(rng.normal(size=(BH, N)), jnp.float32)
+    one_block = rwkv6_wkv(*args[:3], w, u, block_t=128, use_pallas=True, interpret=True)
+    four_blocks = rwkv6_wkv(*args[:3], w, u, block_t=32, use_pallas=True, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(one_block), np.asarray(four_blocks), rtol=1e-5, atol=1e-5
+    )

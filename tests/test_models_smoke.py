@@ -1,0 +1,188 @@
+"""Per-architecture smoke tests: reduced same-family config, one forward
++ one train-gradient step + a few decode steps on CPU; asserts shapes
+and finiteness (assignment requirement (f))."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, reduce_config
+from repro.models import Transformer, decode_step, forward, init_cache, loss_fn
+
+
+def _batch(cfg, B=2, S=16, key=0):
+    rng = np.random.default_rng(key)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32),
+    }
+    if cfg.mrope_sections is not None:
+        pos = np.broadcast_to(np.arange(S)[None, :, None], (B, S, 3)).copy()
+        batch["positions"] = jnp.asarray(pos, jnp.int32)
+    if cfg.encoder_layers:
+        batch["frames"] = jnp.asarray(
+            rng.normal(0, 1, (B, cfg.encoder_seq, cfg.d_model)), jnp.float32
+        )
+    return batch
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_forward_and_grad(arch_id):
+    cfg = reduce_config(get_config(arch_id))
+    model = Transformer(cfg, model_axis=1)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    logits = jax.jit(lambda p, b: forward(p, cfg, b))(params, batch)
+    assert logits.shape == (2, 16, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+
+    loss, grads = jax.jit(jax.value_and_grad(lambda p: loss_fn(p, cfg, batch)))(params)
+    assert bool(jnp.isfinite(loss)), f"{arch_id}: non-finite loss"
+    flat = jax.tree.leaves(grads)
+    assert all(bool(jnp.isfinite(g.astype(jnp.float32)).all()) for g in flat)
+    assert any(float(jnp.abs(g.astype(jnp.float32)).max()) > 0 for g in flat)
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_decode_steps(arch_id):
+    cfg = reduce_config(get_config(arch_id))
+    model = Transformer(cfg, model_axis=1)
+    params = model.init(jax.random.PRNGKey(1))
+    B = 2
+    frames = (
+        jnp.asarray(
+            np.random.default_rng(2).normal(0, 1, (B, cfg.encoder_seq, cfg.d_model)),
+            jnp.float32,
+        )
+        if cfg.encoder_layers
+        else None
+    )
+    cache = init_cache(params, cfg, batch=B, max_len=32, frames=frames)
+    step = jax.jit(lambda p, c, t: decode_step(p, cfg, c, t))
+    tok = jnp.zeros((B,), jnp.int32)
+    for _ in range(4):
+        logits, cache = step(params, cache, tok)
+        assert logits.shape == (B, cfg.vocab_size)
+        assert bool(jnp.isfinite(logits).all())
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    assert int(cache["step"]) == 4
+
+
+def test_decode_matches_prefill_for_dense():
+    """Teacher-forced decode logits must match full-forward logits."""
+    cfg = reduce_config(get_config("llama3.2-3b"))
+    model = Transformer(cfg, model_axis=1)
+    params = model.init(jax.random.PRNGKey(3))
+    B, S = 1, 8
+    batch = _batch(cfg, B=B, S=S, key=5)
+    full = forward(params, cfg, batch)  # (B,S,V)
+    cache = init_cache(params, cfg, batch=B, max_len=16)
+    outs = []
+    for t in range(S):
+        logits, cache = decode_step(params, cfg, cache, batch["tokens"][:, t])
+        outs.append(logits)
+    dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(
+        np.asarray(dec, np.float32), np.asarray(full, np.float32),
+        rtol=2e-2, atol=2e-2,
+    )
+
+
+def test_decode_matches_prefill_for_ssm():
+    cfg = reduce_config(get_config("rwkv6-3b"))
+    model = Transformer(cfg, model_axis=1)
+    params = model.init(jax.random.PRNGKey(4))
+    B, S = 1, 8
+    batch = _batch(cfg, B=B, S=S, key=6)
+    full = forward(params, cfg, batch)
+    cache = init_cache(params, cfg, batch=B, max_len=16)
+    outs = []
+    for t in range(S):
+        logits, cache = decode_step(params, cfg, cache, batch["tokens"][:, t])
+        outs.append(logits)
+    dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(
+        np.asarray(dec, np.float32), np.asarray(full, np.float32),
+        rtol=2e-2, atol=2e-2,
+    )
+
+
+def test_decode_matches_prefill_for_hybrid():
+    # fp32 config: checks the recurrence semantics exactly (bf16 parity
+    # is rounding-limited through the RG-LRU state and tested at the
+    # unit level in fp32 too)
+    import dataclasses
+
+    cfg = dataclasses.replace(
+        reduce_config(get_config("recurrentgemma-9b")), dtype="float32"
+    )
+    model = Transformer(cfg, model_axis=1)
+    params = model.init(jax.random.PRNGKey(5))
+    B, S = 1, 8
+    batch = _batch(cfg, B=B, S=S, key=7)
+    full = forward(params, cfg, batch)
+    cache = init_cache(params, cfg, batch=B, max_len=16)
+    outs = []
+    for t in range(S):
+        logits, cache = decode_step(params, cfg, cache, batch["tokens"][:, t])
+        outs.append(logits)
+    dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(
+        np.asarray(dec, np.float32), np.asarray(full, np.float32),
+        rtol=2e-3, atol=2e-3,
+    )
+
+
+def test_rglru_chunked_scan_consistency():
+    """chunk=2 vs single-chunk associative scan must agree (fp32)."""
+    import dataclasses
+
+    from repro.models.layers import init_tree
+    from repro.models.rglru import rglru_block, rglru_params
+
+    cfg = dataclasses.replace(
+        reduce_config(get_config("recurrentgemma-9b")), dtype="float32"
+    )
+    params = init_tree(rglru_params(cfg), jax.random.PRNGKey(0), jnp.float32)
+    x = jnp.asarray(
+        np.random.default_rng(0).normal(0, 1, (2, 8, cfg.d_model)), jnp.float32
+    )
+    a = rglru_block(params, cfg, x, chunk=2)
+    b = rglru_block(params, cfg, x, chunk=8)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_chunked_attention_matches_full():
+    from repro.models.attention import attention
+    cfg = reduce_config(get_config("yi-6b"))
+    model = Transformer(cfg, model_axis=1)
+    params = model.init(jax.random.PRNGKey(6))
+    p = jax.tree.map(lambda a: a[0], params["groups"][0]["b0"])["attn"]
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(0, 1, (2, 64, cfg.d_model)), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(64)[None], (2, 64))
+    full = attention(p, cfg, x, pos, chunk_threshold=8192)
+    chunked = attention(p, cfg, x, pos, chunk_threshold=16)
+    np.testing.assert_allclose(
+        np.asarray(full, np.float32), np.asarray(chunked, np.float32),
+        rtol=2e-3, atol=2e-3,
+    )
+
+
+def test_param_counts_full_configs():
+    """Full (non-reduced) configs: parameter counts in the right ballpark
+    (catches misconfigured dims without materializing weights)."""
+    expected = {
+        "yi-6b": (5.5e9, 7.5e9),
+        "gemma-7b": (7.5e9, 10e9),
+        "gemma2-27b": (25e9, 30e9),
+        "llama3.2-3b": (2.8e9, 4.0e9),
+        "qwen2-vl-72b": (68e9, 76e9),
+        "rwkv6-3b": (2.5e9, 4.0e9),
+        "recurrentgemma-9b": (8.0e9, 11e9),
+        "grok-1-314b": (290e9, 330e9),
+        "whisper-tiny": (25e6, 80e6),
+    }
+    for arch, (lo, hi) in expected.items():
+        n = Transformer(get_config(arch)).num_params
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B params out of [{lo/1e9}, {hi/1e9}]"

@@ -1,0 +1,106 @@
+"""End-to-end multiscale gossip behavior (paper Thm 1, Thm 2, §VI)."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    multiscale_gossip,
+    path_averaging,
+    random_geometric_graph,
+    relative_error,
+    theorem2_bound,
+)
+
+
+@pytest.fixture(scope="module")
+def ms_result(rgg500, x0_500):
+    return multiscale_gossip(rgg500, x0_500, eps=1e-4, seed=0)
+
+
+def test_error_within_theorem2_bound(ms_result, x0_500):
+    # Thm 2: error <= sqrt(6) n eps w.h.p. (loose; typical runs are far
+    # below — the point of the test is the guarantee, cf. eq. (2))
+    assert ms_result.error(x0_500) <= theorem2_bound(500, 1e-4)
+
+
+def test_all_levels_converged(ms_result):
+    for lr in ms_result.levels:
+        assert lr.converged_frac == 1.0
+
+
+def test_message_and_send_accounting_agree(ms_result):
+    # every single-hop transmission is attributed to exactly one sender
+    assert ms_result.node_sends.sum() == ms_result.messages
+
+
+def test_longest_route_scaling(ms_result):
+    # paper: messages at the coarsest scale travel O(n^(1/3)) hops
+    n = 500
+    top = [lr for lr in ms_result.levels if lr.level == 1]
+    assert top and top[0].max_hops <= 4 * n ** (1.0 / 3.0)
+
+
+def test_rep_counts_bounded_by_levels(ms_result):
+    assert ms_result.rep_counts.max() <= ms_result.partition.k
+    assert ms_result.rep_counts.sum() > 0
+
+
+def test_weighted_variant_is_exact(rgg500, x0_500):
+    res = multiscale_gossip(rgg500, x0_500, eps=1e-4, seed=0, weighted=True)
+    # exact-mass fusion: final error limited by per-level gossip eps, not
+    # by cell-occupancy imbalance
+    assert res.error(x0_500) <= 20 * 1e-4
+    assert res.error(x0_500) <= theorem2_bound(500, 1e-4) / 10
+
+
+def test_two_level_variant(rgg500, x0_500):
+    res = multiscale_gossip(
+        rgg500, x0_500, eps=1e-4, seed=0, weighted=True, k=2, a=0.5
+    )
+    assert res.partition.k == 2
+    assert res.error(x0_500) <= 20 * 1e-4
+    # paper §VI-B: with a=1/2 the longest route is O(n^(1/4)) hops
+    top = [lr for lr in res.levels if lr.level == 1]
+    assert top[0].max_hops <= 6 * 500 ** (1.0 / 4.0)
+
+
+def test_fixed_iterations_variant(rgg500, x0_500):
+    ideal = multiscale_gossip(rgg500, x0_500, eps=1e-4, seed=0, weighted=True)
+    fi = multiscale_gossip(
+        rgg500, x0_500, eps=1e-4, seed=0, weighted=True, fixed_ticks_scale=1.0
+    )
+    # FI spends more messages (paper §VI: redundant transmissions) but
+    # still reaches the accuracy target
+    assert fi.messages >= ideal.messages
+    assert fi.error(x0_500) <= 20 * 1e-4
+
+
+def test_beats_path_averaging(rgg500, x0_500):
+    # paper Fig. 3: multiscale gossip uses noticeably fewer transmissions
+    ms = multiscale_gossip(rgg500, x0_500, eps=1e-4, seed=0, weighted=True)
+    pa = path_averaging(rgg500, x0_500, eps=1e-4, seed=0)
+    assert pa.converged
+    assert ms.messages < pa.messages
+
+
+def test_message_loss_degrades_accuracy(rgg500, x0_500):
+    lossy = multiscale_gossip(
+        rgg500, x0_500, eps=1e-4, seed=0, weighted=True, loss_p=0.9,
+        max_ticks_per_level=20_000,
+    )
+    reliable = multiscale_gossip(rgg500, x0_500, eps=1e-4, seed=0, weighted=True)
+    # §VI-C-2: under message loss the accuracy target is unreachable
+    assert lossy.error(x0_500) > reliable.error(x0_500)
+
+
+def test_scaling_near_linear():
+    # Thm 1: messages grow near-linearly; check the empirical exponent on
+    # a small n-range stays well below the n^2/log n of standard gossip
+    ns, msgs = [], []
+    for n in (250, 500, 1000):
+        g = random_geometric_graph(n, seed=n)
+        x0 = np.random.default_rng(n).normal(0, 1, n)
+        r = multiscale_gossip(g, x0, eps=1e-4, seed=0, weighted=True)
+        ns.append(n)
+        msgs.append(r.messages)
+    slope = np.polyfit(np.log(ns), np.log(msgs), 1)[0]
+    assert slope < 1.6, f"message scaling exponent {slope:.2f} too steep"

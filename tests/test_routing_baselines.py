@@ -1,0 +1,89 @@
+"""Geographic routing + baseline algorithms (paper §II, §VI)."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    geographic_gossip,
+    greedy_route,
+    handshake_cost,
+    path_averaging,
+    route_to_node,
+    standard_gossip,
+)
+
+
+def test_greedy_route_valid_and_terminates(rgg500):
+    rng = np.random.default_rng(0)
+    for _ in range(20):
+        src = int(rng.integers(500))
+        target = rng.uniform(0, 1, 2)
+        r = greedy_route(rgg500, src, target)
+        assert r.nodes[0] == src
+        # consecutive path nodes are graph neighbors
+        for u, v in zip(r.nodes, r.nodes[1:]):
+            assert v in rgg500.neighbors[u, : rgg500.degrees[u]]
+        # recipient is locally closest to the target
+        dst = int(r.nodes[-1])
+        d_dst = np.sum((rgg500.coords[dst] - target) ** 2)
+        nbrs = rgg500.neighbors[dst, : rgg500.degrees[dst]]
+        assert (np.sum((rgg500.coords[nbrs] - target) ** 2, 1) >= d_dst).all()
+
+
+def test_route_to_node_reaches_destination(rgg500):
+    rng = np.random.default_rng(1)
+    greedy_success = 0
+    for _ in range(30):
+        u, v = rng.integers(500, size=2)
+        r = route_to_node(rgg500, int(u), int(v))
+        assert r.nodes[0] == u and r.nodes[-1] == v
+        greedy_success += r.greedy_ok
+    # paper [11]: greedy geographic routing succeeds w.h.p. on RGGs
+    assert greedy_success >= 25
+
+
+def test_send_counts_sum_to_two_hops(rgg500):
+    r = route_to_node(rgg500, 0, 499)
+    sends = r.send_counts(500)
+    assert sends.sum() == 2 * r.hops
+
+
+def test_path_averaging_mass_conserved(rgg500, x0_500):
+    res = path_averaging(rgg500, x0_500, eps=1e-4, seed=0)
+    assert res.converged
+    np.testing.assert_allclose(res.x.sum(), x0_500.sum(), rtol=1e-9)
+    assert res.node_sends.sum() == res.messages
+    assert res.error(x0_500) <= 1.2e-4
+
+
+def test_geographic_gossip_converges(rgg500, x0_500):
+    res = geographic_gossip(rgg500, x0_500, eps=1e-3, seed=0)
+    assert res.converged
+    assert res.error(x0_500) <= 1.2e-3
+    assert res.node_sends.sum() == res.messages
+
+
+def test_standard_gossip_is_least_efficient(rgg500, x0_500):
+    sg = standard_gossip(rgg500, x0_500, eps=1e-3, seed=0)
+    gg = geographic_gossip(rgg500, x0_500, eps=1e-3, seed=0)
+    assert sg.converged
+    # Boyd et al.: Theta(n^2/log n) for neighbor-only gossip vs
+    # Theta(n^1.5/sqrt(log n)) for geographic gossip
+    assert sg.messages > gg.messages
+
+
+def test_path_averaging_loss_distorts(rgg500, x0_500):
+    res = path_averaging(
+        rgg500, x0_500, eps=1e-4, seed=0, loss_p=0.8, max_iters=30_000
+    )
+    assert not res.converged or res.error(x0_500) > 1e-4
+
+
+def test_handshake_cost_statistics():
+    rng = np.random.default_rng(0)
+    T = 100_000
+    for p in (0.5, 0.8, 1.0):
+        c = handshake_cost(T, p, rng)
+        assert c >= T
+        np.testing.assert_allclose(c, T / p, rtol=0.02)
+    with pytest.raises(ValueError):
+        handshake_cost(10, 0.0)

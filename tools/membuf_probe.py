@@ -1,0 +1,87 @@
+"""Dry-run memory profiler: compile a (reduced-depth) cell and list the
+largest per-device HLO buffers — the working tool behind the §Perf
+memory iterations.
+
+  PYTHONPATH=src python tools/membuf_probe.py --arch grok-1-314b \
+      --shape train_4k --unit "attn" --layers 1 [--top 15]
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import dataclasses
+import re
+from collections import Counter
+
+import jax
+
+from repro.configs import get_config
+from repro.launch.hlo_analysis import DTYPE_BYTES
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import build_cell
+
+SHAPE_RE = re.compile(r"^\s*%?\S+ = ([a-z0-9]+)\[([\d,]+)\]")
+
+
+def probe(arch, shape, unit=None, layers=None, top=15, multi_pod=False):
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cfg = get_config(arch)
+    changes = {}
+    if unit:
+        changes["block_unit"] = tuple(unit.split(","))
+    if layers:
+        changes["num_layers"] = layers
+        if cfg.encoder_layers:
+            changes["encoder_layers"] = min(cfg.encoder_layers, layers)
+    if changes:
+        cfg = dataclasses.replace(cfg, **changes)
+    cell = build_cell(cfg, shape, mesh)
+    with jax.set_mesh(mesh):
+        c = (
+            jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                    out_shardings=cell.out_shardings,
+                    donate_argnums=cell.donate)
+            .lower(*cell.args_abs)
+            .compile()
+        )
+    ma = c.memory_analysis()
+    print(f"{arch} {shape} layers={cfg.num_layers} unit={cfg.block_unit}: "
+          f"args={ma.argument_size_in_bytes/2**30:.2f}GiB "
+          f"temp={ma.temp_size_in_bytes/2**30:.2f}GiB")
+    sizes = Counter()
+    for line in c.as_text().splitlines():
+        m = SHAPE_RE.match(line)
+        if m and m.group(1) in DTYPE_BYTES:
+            n = 1
+            for d in m.group(2).split(","):
+                n *= int(d)
+            sizes[(m.group(1), m.group(2))] += 1
+    items = sorted(
+        sizes.items(),
+        key=lambda kv: -DTYPE_BYTES[kv[0][0]]
+        * eval(kv[0][1].replace(",", "*")),
+    )
+    shown = 0
+    for (dt, dims), cnt in items:
+        n = 1
+        for d in dims.split(","):
+            n *= int(d)
+        b = n * DTYPE_BYTES[dt]
+        if b < 2**27:
+            break
+        print(f"  {dt}[{dims}] x{cnt}  {b/2**30:.2f}GiB each")
+        shown += 1
+        if shown >= top:
+            break
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--unit", default=None)
+    ap.add_argument("--layers", type=int, default=None)
+    ap.add_argument("--top", type=int, default=15)
+    ap.add_argument("--multi-pod", action="store_true")
+    a = ap.parse_args()
+    probe(a.arch, a.shape, a.unit, a.layers, a.top, a.multi_pod)
