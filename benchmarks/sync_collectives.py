@@ -31,6 +31,7 @@ def run() -> list[str]:
 
     from repro.dist import SyncConfig, suggest_levels, sync_gradients
     from repro.launch.hlo_analysis import collective_bytes
+    from repro.launch.mesh import set_mesh
     from .common import csv_line, save_artifact
 
     R = 32
@@ -56,7 +57,7 @@ def run() -> list[str]:
     }
     rows, lines = {}, []
     for name, cfg_s in strategies.items():
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             compiled = (
                 jax.jit(
                     lambda g: sync_gradients(g, cfg_s, R),

@@ -1,0 +1,33 @@
+"""repro.dist — decentralized gradient synchronization (the paper's
+multiscale gossip applied to data-parallel training replicas).
+
+Public surface:
+  SyncConfig / sync_gradients  strategy-dispatched replica-axis mixing
+  suggest_levels               the n^(2/3) recursive-partition rule
+  compression                  error-feedback gradient compression
+"""
+from .compression import (
+    CompressionConfig, compress, decompress, init_residual, wire_fraction,
+)
+from .gossip_sync import STRATEGIES, SyncConfig, sync_gradients
+from .topology import (
+    complete_matrix, default_rounds, hierarchy_matrix, is_doubly_stochastic,
+    ring_matrix, suggest_levels,
+)
+
+__all__ = [
+    "SyncConfig",
+    "sync_gradients",
+    "STRATEGIES",
+    "suggest_levels",
+    "ring_matrix",
+    "complete_matrix",
+    "hierarchy_matrix",
+    "default_rounds",
+    "is_doubly_stochastic",
+    "CompressionConfig",
+    "compress",
+    "decompress",
+    "init_residual",
+    "wire_fraction",
+]

@@ -1,0 +1,132 @@
+"""Gradient compression with error feedback for gossip synchronization.
+
+Gossip strategies trade exactness for message cost; compression trades
+wire bytes for a bounded, *recoverable* error: whatever a round does not
+send is kept in a per-replica residual and re-injected next round
+(error feedback, Seide et al. / Karimireddy et al.), so compressed
+averaging still moves all gradient mass eventually.
+
+Schemes
+-------
+``none``   identity (and the fast path: returns its inputs untouched).
+``topk``   per replica, keep the k = max(1, frac * D) largest-magnitude
+           entries of the (gradient + residual) accumulator; the sent
+           tensor plus the new residual reconstructs the accumulator
+           bitwise (sent entries are exact copies, the rest exact
+           leftovers).
+``int8``   symmetric per-leaf quantization to 127 bins: |error| <=
+           max|g| / 127 per entry; wire cost 1 byte vs 4 (fraction
+           0.25).
+
+`compress` returns the *as-transmitted* dense tensors (what the peer
+would reconstruct) so the mixing math stays dtype-uniform and jittable;
+`decompress` is the explicit wire-decoding hook (identity for these
+dense simulations, kept so call sites are already shaped for packed
+formats).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+__all__ = [
+    "CompressionConfig",
+    "compress",
+    "decompress",
+    "init_residual",
+    "wire_fraction",
+]
+
+SCHEMES = ("none", "topk", "int8")
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionConfig:
+    scheme: str = "none"
+    topk_fraction: float = 0.25
+
+    def __post_init__(self):
+        if self.scheme not in SCHEMES:
+            raise ValueError(
+                f"unknown scheme {self.scheme!r}; expected one of {SCHEMES}"
+            )
+        if not 0.0 < self.topk_fraction <= 1.0:
+            raise ValueError(
+                f"topk_fraction must be in (0, 1], got {self.topk_fraction}"
+            )
+
+
+def init_residual(grads: Any) -> Any:
+    """Zero error-feedback residual matching the gradient pytree."""
+    return jax.tree.map(jnp.zeros_like, grads)
+
+
+def compress(grads: Any, residual: Any, cfg: CompressionConfig) -> tuple[Any, Any]:
+    """(payload, new_residual) with payload + new_residual == grads + residual
+    exactly for topk, and payload within the quantization bound for int8.
+    Leaves carry a leading replica axis; compression decisions are made
+    per replica (each replica transmits independently)."""
+    if cfg.scheme == "none":
+        return grads, residual
+
+    def sent_of(g, r):
+        acc = g + r
+        if cfg.scheme == "topk":
+            return _topk_rows(acc, cfg.topk_fraction)
+        return _int8_roundtrip(acc)  # int8
+
+    payload = jax.tree.map(sent_of, grads, residual)
+    new_res = jax.tree.map(lambda g, r, p: (g + r) - p, grads, residual, payload)
+    return payload, new_res
+
+
+def decompress(payload: Any, cfg: CompressionConfig) -> Any:
+    """Wire-decoding hook; dense simulated payloads decode to themselves."""
+    del cfg
+    return payload
+
+
+def wire_fraction(cfg: CompressionConfig) -> float:
+    """Bytes on the wire relative to dense float32.
+
+    topk ships (value, index) pairs — 2x per kept entry, capped at dense
+    cost (a sender would fall back to dense past the break-even point);
+    int8 ships one byte per entry plus a scalar scale (amortized away).
+    """
+    if cfg.scheme == "none":
+        return 1.0
+    if cfg.scheme == "int8":
+        return 0.25
+    return min(1.0, 2.0 * cfg.topk_fraction)
+
+
+def _topk_rows(acc: jax.Array, fraction: float) -> jax.Array:
+    """Keep the k largest-|.| entries per replica row; zero the rest.
+
+    Ties at the threshold keep every tied entry, hence nnz can exceed k
+    by the tie count (tests tolerate k+1); kept entries are bitwise
+    copies of the accumulator so the residual decomposition is exact.
+    """
+    R = acc.shape[0]
+    flat = acc.reshape(R, -1)
+    d = flat.shape[1]
+    k = max(1, int(fraction * d))
+    mag = jnp.abs(flat)
+    kth = lax.top_k(mag, k)[0][:, -1]
+    mask = mag >= kth[:, None]
+    return jnp.where(mask, flat, 0.0).reshape(acc.shape).astype(acc.dtype)
+
+
+def _int8_roundtrip(acc: jax.Array) -> jax.Array:
+    """Symmetric per-replica int8 quantize/dequantize: q = round(x/s)
+    with s = max|x_r|/127 computed per replica row (a sender only knows
+    its own gradient), so |dequant - x| <= s/2 <= max|x_r|/127."""
+    row_axes = tuple(range(1, acc.ndim))
+    scale = jnp.max(jnp.abs(acc), axis=row_axes, keepdims=True) / 127.0
+    safe = jnp.maximum(scale, jnp.finfo(acc.dtype).tiny)
+    q = jnp.clip(jnp.round(acc / safe), -127, 127).astype(jnp.int8)
+    return jnp.where(scale > 0, q.astype(acc.dtype) * safe, jnp.zeros_like(acc))

@@ -1,0 +1,229 @@
+"""Gradient synchronization strategies over a replica axis.
+
+The paper's multiscale gossip (Algorithm 1), transplanted from wireless
+sensor networks to decentralized data-parallel training: R parameter
+replicas hold per-replica gradients (leading axis R on every pytree
+leaf) and `sync_gradients` mixes them according to a `SyncConfig`.
+
+Strategies
+----------
+``allreduce``
+    Exact global mean — the dense baseline every byte of which crosses
+    the network diameter (one global all-reduce per leaf).
+``hierarchical``
+    Exact grouped fusion over the `levels` hierarchy: cell means at the
+    finest scale, then means-of-means up to the root, broadcast back.
+    Bitwise the same fixed point as allreduce, but lowering emits
+    grouped collectives whose cross-pod share shrinks to the top-level
+    fusion only.
+``ring``
+    Flat randomized-gossip analogue: `rounds` applications of the
+    doubly-stochastic ring operator x <- (x + roll(x,+1) + roll(x,-1))/3
+    along the replica axis.  Preserves the replica mean exactly; replica
+    disagreement contracts by the ring's second eigenvalue per round
+    (the paper's slow baseline — many cheap neighbor exchanges).
+``multiscale``
+    Algorithm 1 on the replica set.  Bottom-up over the recursive cells
+    from `suggest_levels`: ring mixing inside every cell of a level in
+    parallel, then promotion of one representative per cell to the next
+    coarser level; after the coarsest level mixes, values disseminate
+    back down the hierarchy (every replica adopts its top-level cell's
+    representative value).  ``exact_fusion=True`` selects the paper's
+    mass-weighted variant (§VII) where every fusion is the exact
+    weighted cell mean, so the disseminated value is the global replica
+    mean exactly; with the uniform occupancy this module enforces it
+    evaluates as the hierarchical grouped-mean ladder.
+
+Every strategy is a pure jittable function of the gradient pytree: on a
+host-replicated array it is plain arithmetic; under a sharded
+``("replica",)`` mesh the same code lowers to real collectives
+(all-reduce for fusions, collective-permute for ring rolls), which
+`launch.hlo_analysis.collective_bytes` classifies intra- vs cross-pod.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .topology import default_rounds, suggest_levels
+
+__all__ = ["SyncConfig", "sync_gradients", "STRATEGIES"]
+
+STRATEGIES = ("allreduce", "hierarchical", "ring", "multiscale")
+
+
+@dataclasses.dataclass(frozen=True)
+class SyncConfig:
+    """Static (hashable) description of one synchronization strategy.
+
+    levels: branching factors coarsest-first, product == R; () defers to
+        `suggest_levels(R)` at call time (ignored by allreduce/ring).
+    rounds: per-level mixing rounds.  For `ring` a single entry is the
+        number of global ring rounds; for `multiscale` either one entry
+        shared by all levels or one per level; () picks
+        `default_rounds(cell_size)` per level.
+    exact_fusion: multiscale only — mass-weighted exact fusion that
+        preserves the replica mean bitwise at every scale.
+    """
+
+    strategy: str = "allreduce"
+    levels: tuple[int, ...] = ()
+    rounds: tuple[int, ...] = ()
+    exact_fusion: bool = False
+
+    def __post_init__(self):
+        if self.strategy not in STRATEGIES:
+            raise ValueError(
+                f"unknown strategy {self.strategy!r}; expected one of {STRATEGIES}"
+            )
+        object.__setattr__(self, "levels", tuple(int(l) for l in self.levels))
+        object.__setattr__(self, "rounds", tuple(int(r) for r in self.rounds))
+        if any(l < 1 for l in self.levels):
+            raise ValueError(f"levels must be positive, got {self.levels}")
+        if any(r < 0 for r in self.rounds):
+            raise ValueError(f"rounds must be >= 0, got {self.rounds}")
+
+    def resolved_levels(self, R: int) -> tuple[int, ...]:
+        levels = self.levels or suggest_levels(R)
+        prod = 1
+        for l in levels:
+            prod *= l
+        if prod != R:
+            raise ValueError(
+                f"levels {levels} factor {prod} replicas but R={R}"
+            )
+        return levels
+
+    def resolved_rounds(self, levels: tuple[int, ...]) -> tuple[int, ...]:
+        if not self.rounds:
+            return tuple(default_rounds(l) for l in levels)
+        if len(self.rounds) == 1:
+            return self.rounds * len(levels)
+        if len(self.rounds) != len(levels):
+            raise ValueError(
+                f"rounds {self.rounds} does not match levels {levels}"
+            )
+        return self.rounds
+
+
+def sync_gradients(grads: Any, cfg: SyncConfig, R: int) -> Any:
+    """Mix a per-replica gradient pytree (leading axis R on every leaf).
+
+    Returns a pytree of the same structure/shapes.  Exact strategies
+    leave every replica holding the global mean; gossip strategies bound
+    the replica disagreement by the configured mixing rounds (the
+    paper's eps) while staying inside the convex hull of the inputs.
+    """
+    if R < 1:
+        raise ValueError(f"R must be >= 1, got {R}")
+    leaves = jax.tree.leaves(grads)
+    for leaf in leaves:
+        if leaf.ndim < 1 or leaf.shape[0] != R:
+            raise ValueError(
+                f"every gradient leaf needs leading replica axis {R}, "
+                f"got shape {leaf.shape}"
+            )
+    if R == 1:
+        return grads
+
+    if cfg.strategy == "allreduce":
+        fn = lambda g: _allreduce(g)
+    elif cfg.strategy == "hierarchical":
+        levels = cfg.resolved_levels(R)
+        fn = lambda g: _hierarchical(g, levels)
+    elif cfg.strategy == "ring":
+        rounds = cfg.rounds[0] if cfg.rounds else 2 * R
+        fn = lambda g: _ring(g, rounds)
+    else:  # multiscale
+        levels = cfg.resolved_levels(R)
+        rounds = cfg.resolved_rounds(levels)
+        fn = lambda g: _multiscale(g, levels, rounds, cfg.exact_fusion)
+    return jax.tree.map(fn, grads)
+
+
+# ------------------------------ strategies ------------------------------
+
+
+def _allreduce(g: jax.Array) -> jax.Array:
+    """Global mean over the replica axis, broadcast back to every replica."""
+    return jnp.broadcast_to(jnp.mean(g, axis=0, keepdims=True), g.shape)
+
+
+def _hierarchical(g: jax.Array, levels: tuple[int, ...]) -> jax.Array:
+    """Grouped means finest-to-coarsest then broadcast back down.
+
+    With uniform cell sizes (levels factor R exactly) the mean-of-means
+    equals the global mean, so the result matches allreduce to float
+    accuracy while lowering as a ladder of small-group collectives.
+    """
+    shape = g.shape
+    x = g.reshape(levels + shape[1:])
+    for ax in range(len(levels) - 1, -1, -1):
+        x = jnp.mean(x, axis=ax, keepdims=True)
+    return jnp.broadcast_to(x, levels + shape[1:]).reshape(shape)
+
+
+def _ring_round(x: jax.Array) -> jax.Array:
+    """One application of the doubly-stochastic ring operator on axis 0."""
+    return (x + jnp.roll(x, 1, axis=0) + jnp.roll(x, -1, axis=0)) / 3.0
+
+
+def _ring(g: jax.Array, rounds: int) -> jax.Array:
+    """Flat neighbor gossip: `rounds` synchronized ring exchanges.
+
+    Symmetric + doubly stochastic => the replica mean is invariant and
+    disagreement contracts geometrically.  Under a replica-sharded mesh
+    each roll is one collective-permute, so the lowered module makes the
+    paper's point: flat gossip is chatty."""
+    return lax.fori_loop(0, rounds, lambda _, x: _ring_round(x), g)
+
+
+def _mix_level(x: jax.Array, axis: int, rounds: int) -> jax.Array:
+    """Ring-mix all cells of one level in parallel along `axis`."""
+    if x.shape[axis] == 1:
+        return x
+    moved = jnp.moveaxis(x, axis, 0)
+    mixed = lax.fori_loop(0, rounds, lambda _, v: _ring_round(v), moved)
+    return jnp.moveaxis(mixed, 0, axis)
+
+
+def _multiscale(
+    g: jax.Array,
+    levels: tuple[int, ...],
+    rounds: tuple[int, ...],
+    exact_fusion: bool,
+) -> jax.Array:
+    """Algorithm 1 over the replica hierarchy.
+
+    Axis layout after reshape: axis j hosts level-(j+1) cells; the last
+    axis is the finest scale.  Bottom-up pass mixes within cells then
+    promotes one representative per cell; top-level values disseminate
+    back down by broadcast (the paper's n-message down-pass).
+    """
+    shape = g.shape
+    payload = shape[1:]
+    k = len(levels)
+    if exact_fusion:
+        # Mass-weighted variant: values travel as (w*x, w) pairs and every
+        # fusion is the exact weighted cell mean.  resolved_levels enforces
+        # uniform occupancy (prod(levels) == R), under which the weighted
+        # fusion is identically the grouped-mean ladder — delegate rather
+        # than carry a uniform weight channel; revisit when cells can be
+        # partially occupied (time-varying replica topologies).
+        return _hierarchical(g, levels)
+
+    x = g.reshape(levels + payload)
+
+    # Plain Algorithm 1: per-cell ring gossip, representative promotion.
+    for ax in range(k - 1, 0, -1):
+        x = _mix_level(x, ax, rounds[ax])
+        # representative = cell member 0 after mixing (approx. cell mean)
+        x = lax.index_in_dim(x, 0, axis=ax, keepdims=True)
+    # coarsest level: representatives gossip on the top ring
+    x = _mix_level(x, 0, rounds[0])
+    # down-pass: every replica adopts its top-level cell's value
+    return jnp.broadcast_to(x, levels + payload).reshape(shape)

@@ -17,7 +17,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from .config import ModelConfig
-from .layers import P_, dense, mrope, rope
+from .layers import P_, current_mesh, dense, mrope, rope
 
 
 def _constrain_heads(x, dp):
@@ -25,7 +25,7 @@ def _constrain_heads(x, dp):
     the S x S score tensors head-sharded instead of replicated."""
     if dp is None:
         return x
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = current_mesh()
     if mesh is None or mesh.empty or "model" not in mesh.shape:
         return x
     dp_size = 1

@@ -24,8 +24,8 @@ from jax.sharding import PartitionSpec as P
 from .attention import attention, attn_params, decode_attention, init_kv_cache
 from .config import ModelConfig
 from .layers import (
-    P_, abstract_tree, count_params, dense, init_tree, layer_norm, mlp,
-    mlp_params, rms_norm, spec_tree, DTYPES,
+    P_, abstract_tree, count_params, current_mesh, dense, init_tree,
+    layer_norm, mlp, mlp_params, rms_norm, spec_tree, DTYPES,
 )
 from .moe import moe_ffn, moe_params
 from .rglru import (
@@ -125,10 +125,14 @@ def model_params(cfg: ModelConfig, model_axis: int = 16) -> dict:
 def _constrain(x, dp):
     if dp is None:                       # decentralized per-replica mode
         return x
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = current_mesh()
     if mesh is None or mesh.empty:       # single-device smoke tests
         return x
-    spec = P(dp, None, "model") if x.shape[-1] % mesh.shape["model"] == 0 else P(dp)
+    spec = (
+        P(dp, None, "model")
+        if "model" in mesh.shape and x.shape[-1] % mesh.shape["model"] == 0
+        else P(dp)
+    )
     return jax.lax.with_sharding_constraint(x, spec)
 
 
@@ -194,6 +198,14 @@ def _unembed(params, cfg: ModelConfig, x):
             x, params["embed"], (((x.ndim - 1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32,
         )
+        # T5/PaLM tied-head scaling: this repo's embed init is unit-variance
+        # (see layers.P_), so against RMS-1 activations the raw tied product
+        # emits std-sqrt(D) logits (loss ~3x ln V at init, huge per-batch
+        # variance, and any final_logit_softcap saturated from step 0);
+        # 1/sqrt(D) restores unit-scale logits for every from-scratch run.
+        # If a reference-checkpoint import path is ever added, this pairs
+        # with the init and must become per-config alongside it.
+        logits = logits * jnp.asarray(cfg.d_model**-0.5, jnp.float32)
     else:
         logits = dense(x, params["unembed"]).astype(jnp.float32)
     if cfg.final_logit_softcap is not None:

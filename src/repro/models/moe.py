@@ -14,7 +14,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from .config import ModelConfig
-from .layers import P_
+from .layers import P_, current_mesh
 
 __all__ = ["moe_params", "moe_ffn"]
 
@@ -23,7 +23,7 @@ def _constrain_tokens(x, dp):
     """Shard a (T, ...) flattened-token tensor over dp on dim 0."""
     if dp is None:
         return x
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = current_mesh()
     if mesh is None or mesh.empty:
         return x
     dp_size = 1
@@ -40,7 +40,7 @@ def _constrain_bsd(x, dp):
     """Shard a (B, S, D) tensor over dp on batch (post-combine)."""
     if dp is None:
         return x
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = current_mesh()
     if mesh is None or mesh.empty:
         return x
     dp_size = 1
@@ -58,7 +58,7 @@ def _constrain_ecd(x, dp):
     21x flops and 20 GiB fp32 activations on grok-1)."""
     if dp is None:
         return x
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = current_mesh()
     if mesh is None or mesh.empty or "model" not in mesh.shape:
         return x
     E = x.shape[0]
@@ -127,7 +127,7 @@ def moe_ffn(params: dict, cfg: ModelConfig, x: jax.Array,
     # constrain the STACKED (n, tc, D) scan output: per-iteration
     # constraints inside the body do not bind the stack buffer
     if dp is not None:
-        mesh = jax.sharding.get_abstract_mesh()
+        mesh = current_mesh()
         if mesh is not None and not mesh.empty:
             dp_size = 1
             for a in (dp if isinstance(dp, tuple) else (dp,)):

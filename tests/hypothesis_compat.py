@@ -1,0 +1,44 @@
+"""Optional-hypothesis shim for the property-test files.
+
+This container has no network access, so `hypothesis` may be absent.
+Import `given` / `settings` / `st` from here instead of from
+hypothesis: with hypothesis installed these are the real objects; when
+it is missing, the shim's `given` replaces the property test with a
+cleanly-skipped placeholder (zero-arg, so pytest never tries to resolve
+the strategy parameters as fixtures) and the rest of the suite runs.
+"""
+try:
+    from hypothesis import HealthCheck, given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+    HealthCheck = None
+
+    class _AnyStrategy:
+        """Accepts any `st.<name>(...)` call; values are never drawn."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _AnyStrategy()
+
+    def given(*_a, **_k):
+        def deco(fn):
+            @pytest.mark.skip(reason="hypothesis not installed")
+            def _skipped():  # pragma: no cover - placeholder body
+                pass
+
+            _skipped.__name__ = fn.__name__
+            _skipped.__doc__ = fn.__doc__
+            return _skipped
+
+        return deco
+
+    def settings(*_a, **_k):
+        return lambda fn: fn
+
+
+strategies = st  # both `import st` and `import strategies as st` work

@@ -1,0 +1,74 @@
+"""Coverage for core/failures.handshake_cost and core/metrics."""
+import numpy as np
+import pytest
+
+from repro.core.failures import handshake_cost
+from repro.core.metrics import relative_error, theorem2_bound
+
+# ----------------------------- handshake ------------------------------
+
+
+def test_handshake_p1_is_passthrough():
+    for t in (0, 1, 7, 12345):
+        assert handshake_cost(t, 1.0) == t
+
+
+def test_handshake_zero_transmissions_free():
+    assert handshake_cost(0, 0.3) == 0
+
+
+def test_handshake_geometric_cost_identity():
+    """Each delivery takes Geometric(p) attempts, so the physical cost of
+    T logical transmissions concentrates around T/p (mean of a sum of T
+    iid geometrics).  With T = 20000 the relative sampling error of the
+    mean is ~1/sqrt(T*(1-p))/... well under 5%."""
+    rng = np.random.default_rng(11)
+    T = 20_000
+    for p in (0.25, 0.5, 0.9):
+        cost = handshake_cost(T, p, rng)
+        assert cost >= T  # retransmission never reduces cost
+        np.testing.assert_allclose(cost, T / p, rtol=0.05)
+
+
+def test_handshake_is_reproducible_with_seeded_rng():
+    a = handshake_cost(500, 0.4, np.random.default_rng(3))
+    b = handshake_cost(500, 0.4, np.random.default_rng(3))
+    assert a == b
+
+
+@pytest.mark.parametrize("p", [0.0, -0.1, 1.5])
+def test_handshake_rejects_bad_probability(p):
+    with pytest.raises(ValueError, match="success probability"):
+        handshake_cost(10, p)
+
+
+# ------------------------------ metrics -------------------------------
+
+
+def test_relative_error_zero_at_consensus():
+    x0 = np.array([1.0, 2.0, 3.0, 6.0])
+    x = np.full(4, x0.mean())
+    assert relative_error(x, x0) == 0.0
+
+
+def test_relative_error_known_value():
+    x0 = np.array([1.0, -1.0])  # mean 0, ||x0|| = sqrt(2)
+    x = np.array([1.0, -1.0])
+    np.testing.assert_allclose(relative_error(x, x0), 1.0)
+    # scaling the estimate scales the error linearly
+    np.testing.assert_allclose(relative_error(0.5 * x, x0), 0.5)
+
+
+def test_relative_error_matches_definition():
+    rng = np.random.default_rng(0)
+    x0 = rng.normal(size=50)
+    x = rng.normal(size=50)
+    want = np.linalg.norm(x - x0.mean()) / np.linalg.norm(x0)
+    np.testing.assert_allclose(relative_error(x, x0), want, rtol=1e-12)
+
+
+def test_theorem2_bound_formula_and_monotonicity():
+    np.testing.assert_allclose(theorem2_bound(100, 1e-3), np.sqrt(6.0) * 0.1)
+    assert theorem2_bound(200, 1e-3) > theorem2_bound(100, 1e-3)
+    assert theorem2_bound(100, 1e-4) < theorem2_bound(100, 1e-3)
+    assert theorem2_bound(0, 1e-3) == 0.0

@@ -1,0 +1,22 @@
+#!/usr/bin/env bash
+# CI entry point: tier-1 test suite + a fast benchmark smoke.
+#
+#   tools/ci.sh            # tier-1 + fig2 smoke
+#   tools/ci.sh --no-bench # tests only
+#
+# Works offline: hypothesis is optional (property tests skip cleanly,
+# see tests/hypothesis_compat.py).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 tests =="
+python -m pytest -x -q
+
+if [[ "${1:-}" != "--no-bench" ]]; then
+    echo "== benchmark smoke (fig2) =="
+    python -m benchmarks.run --only fig2
+fi
+
+echo "CI OK"

@@ -17,7 +17,7 @@ import jax
 
 from repro.configs import get_config
 from repro.launch.hlo_analysis import DTYPE_BYTES
-from repro.launch.mesh import make_production_mesh
+from repro.launch.mesh import make_production_mesh, set_mesh
 from repro.launch.specs import build_cell
 
 SHAPE_RE = re.compile(r"^\s*%?\S+ = ([a-z0-9]+)\[([\d,]+)\]")
@@ -36,7 +36,7 @@ def probe(arch, shape, unit=None, layers=None, top=15, multi_pod=False):
     if changes:
         cfg = dataclasses.replace(cfg, **changes)
     cell = build_cell(cfg, shape, mesh)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         c = (
             jax.jit(cell.fn, in_shardings=cell.in_shardings,
                     out_shardings=cell.out_shardings,
