@@ -5,6 +5,11 @@ trials on graphs up to 8000 nodes; on this single-core container the
 default benchmark profile uses 3 trials and the same size range, with
 `--full` restoring the paper's trial counts.  Scaling-law fits still
 span >= 1 decade of n.
+
+Trial-vmapping note: the multiscale benchmarks run all trials of one
+configuration in a single compiled vmapped call (`multiscale_gossip(...,
+trials=T, backend=...)`); artifacts record `wall_clock_s` per algorithm
+plus the `backend` used so perf regressions are visible in CI diffs.
 """
 from __future__ import annotations
 
@@ -15,6 +20,15 @@ import time
 import numpy as np
 
 ARTIFACTS = os.path.join(os.path.dirname(__file__), "artifacts")
+
+ENGINE_BACKENDS = ("lax", "pallas")
+
+
+def timed(fn, *args, **kwargs):
+    """(result, seconds) of one call — wall-clock for artifact payloads."""
+    t0 = time.perf_counter()
+    out = fn(*args, **kwargs)
+    return out, time.perf_counter() - t0
 
 
 def save_artifact(name: str, payload: dict) -> str:

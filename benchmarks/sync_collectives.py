@@ -12,7 +12,14 @@ share.  Expected, mirroring the paper:
   * multiscale: permutes mostly INSIDE cells; only representative
     promotion crosses pods — the O(n^(1/3))-hop analogue.
 
+Cross-pod classification goes through `device_pod_map`: partition ids in
+lowered replica_groups index the mesh device assignment (reshapes of the
+replica axis remap them), so the raw `id // pod_size` heuristic is only
+the fallback.
+
 Run standalone (sets its own device count): python -m benchmarks.sync_collectives
+    --wallclock   additionally times the compiled sync on the available
+                  devices (skips cleanly on single-device hosts)
 """
 import os
 
@@ -20,19 +27,20 @@ if __name__ == "__main__":
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=32"
 
 import json
+import time
 
 import numpy as np
 
 
-def run() -> list[str]:
+def run(wallclock: bool = False) -> list[str]:
     import jax
     import jax.numpy as jnp
     from jax.sharding import NamedSharding, PartitionSpec as P
 
     from repro.dist import SyncConfig, suggest_levels, sync_gradients
-    from repro.launch.hlo_analysis import collective_bytes
+    from repro.launch.hlo_analysis import collective_bytes, device_pod_map
     from repro.launch.mesh import set_mesh
-    from .common import csv_line, save_artifact
+    from .common import csv_line, load_artifact, save_artifact
 
     R = 32
     mesh = jax.make_mesh((R,), ("replica",))
@@ -55,6 +63,26 @@ def run() -> list[str]:
         "multiscale_exact": SyncConfig("multiscale", levels=levels,
                                        exact_fusion=True),
     }
+    # 16 replicas per "pod"; partition ids map through the assignment
+    pod_of = device_pod_map(list(mesh.devices.flat), pod_size=16)
+    can_time = jax.device_count() >= 2
+    # standalone mode forces 32 emulated host devices — wallclock numbers
+    # are then scheduling-emulation times, not real interconnect traffic;
+    # label them so they are never read as hardware measurements
+    emulated = "--xla_force_host_platform_device_count" in os.environ.get(
+        "XLA_FLAGS", ""
+    )
+    grads = None
+    if wallclock and can_time:  # identical for every strategy — build once
+        grads = {
+            k: jax.device_put(
+                np.random.default_rng(0).normal(0, 1, a.shape).astype(
+                    np.float32
+                ),
+                sh[k],
+            )
+            for k, a in grads_abs.items()
+        }
     rows, lines = {}, []
     for name, cfg_s in strategies.items():
         with set_mesh(mesh):
@@ -66,8 +94,7 @@ def run() -> list[str]:
                 .lower(grads_abs)
                 .compile()
             )
-        # 16 replicas per "pod" for the cross-pod classification
-        stats = collective_bytes(compiled.as_text(), pod_size=16)
+        stats = collective_bytes(compiled.as_text(), pod_size=16, pod_of=pod_of)
         rows[name] = stats.asdict()
         rows[name]["bytes_per_replica_payload"] = float(per_replica_bytes)
         lines.append(csv_line(
@@ -77,10 +104,50 @@ def run() -> list[str]:
             f"ops={stats.count} "
             f"xpod_frac={stats.cross_pod_bytes/max(stats.total_bytes,1):.2f}",
         ))
-    save_artifact("sync_collectives", {"levels": list(levels), "rows": rows})
+        if wallclock and can_time:
+            jax.block_until_ready(compiled(grads))  # warm-up
+            reps = 3
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                jax.block_until_ready(compiled(grads))
+            ms = (time.perf_counter() - t0) * 1e3 / reps
+            rows[name]["wallclock_ms"] = ms
+            rows[name]["wallclock_emulated"] = emulated
+            lines.append(csv_line(
+                f"sync/{name}/wallclock", ms * 1e3,
+                f"ms_per_sync={ms:.1f} devices={jax.device_count()} "
+                f"emulated={emulated}",
+            ))
+    if wallclock and not can_time:
+        lines.append(csv_line(
+            "sync/wallclock", 0.0,
+            f"SKIP: single-device host (devices={jax.device_count()})",
+        ))
+    payload = {"levels": list(levels), "rows": rows}
+    if wallclock:
+        payload["wallclock_devices"] = jax.device_count()
+        payload["wallclock_emulated"] = emulated
+    else:
+        # lowering-only runs keep the last measured wall-clock data so a
+        # default CI pass does not erase it from the tracked artifact
+        prev = load_artifact("sync_collectives") or {}
+        for k in ("wallclock_devices", "wallclock_emulated"):
+            if k in prev:
+                payload[k] = prev[k]
+        for name, row in payload["rows"].items():
+            old = prev.get("rows", {}).get(name, {})
+            for k in ("wallclock_ms", "wallclock_emulated"):
+                if k in old:
+                    row[k] = old[k]
+    save_artifact("sync_collectives", payload)
     return lines
 
 
 if __name__ == "__main__":
-    for line in run():
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--wallclock", action="store_true",
+                    help="time compiled sync_gradients on available devices")
+    for line in run(wallclock=ap.parse_args().wallclock):
         print(line)

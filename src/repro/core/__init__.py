@@ -12,28 +12,55 @@ from .baselines import (
     path_averaging,
     standard_gossip,
 )
+from .engine import EngineResult, execute_plan
 from .failures import handshake_cost
-from .gossip import GossipResult, batched_graphs, gossip_until
+from .gossip import GossipResult, batched_graphs, gossip_core, gossip_until
 from .metrics import relative_error, theorem2_bound
-from .multiscale import LevelReport, MultiscaleResult, multiscale_gossip
+from .multiscale import (
+    LevelReport,
+    MultiscaleResult,
+    MultiscaleTrials,
+    multiscale_gossip,
+)
 from .partition import Partition, auto_levels, build_partition
+from .plan import HierarchyPlan, LevelPlan, build_plan
 from .rgg import Graph, connectivity_radius, grid_graph, random_geometric_graph
-from .routing import Route, greedy_route, route_table, route_to_node
+from .routing import (
+    BatchedRoutes,
+    Route,
+    accumulate_route_sends,
+    batched_greedy_routes,
+    batched_routes_to_nodes,
+    greedy_route,
+    route_table,
+    route_to_node,
+)
 from .synchronous import SyncMultiscaleResult, synchronous_multiscale
 
 __all__ = [
     "BaselineResult",
+    "BatchedRoutes",
+    "EngineResult",
     "Graph",
     "GossipResult",
+    "HierarchyPlan",
+    "LevelPlan",
     "LevelReport",
     "MultiscaleResult",
+    "MultiscaleTrials",
     "Partition",
     "Route",
+    "accumulate_route_sends",
     "auto_levels",
     "batched_graphs",
+    "batched_greedy_routes",
+    "batched_routes_to_nodes",
     "build_partition",
+    "build_plan",
     "connectivity_radius",
+    "execute_plan",
     "geographic_gossip",
+    "gossip_core",
     "gossip_until",
     "greedy_route",
     "grid_graph",

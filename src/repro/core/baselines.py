@@ -8,6 +8,21 @@
 * `standard_gossip` — Boyd et al. [2]: single-hop neighbor gossip
   (wraps the batched engine with B=1).
 
+Both routing-heavy baselines draw their routes through the same
+vectorized router the plan/execute core uses
+(`routing.batched_greedy_routes`): routes for a large block of upcoming
+iterations are computed in one batched frontier-stepping call, consumed
+in convergence-check windows, and send attribution is a vectorized
+scatter-add over the padded path arrays
+(`routing.accumulate_route_sends`) instead of per-hop Python loops.
+Only the value updates remain sequential (they are order-dependent);
+they are O(path length) numpy ops per iteration.
+
+The (source, target) stream is drawn in the same per-iteration order as
+the historical scalar implementation, and routing is value- and
+rng-free, so in the reliable regime the trajectory, message count, and
+attribution are draw-for-draw identical to the pre-batching code.
+
 All report total single-hop transmissions and per-node send counts so
 the paper's figures can be reproduced exactly.
 """
@@ -20,6 +35,9 @@ import numpy as np
 
 from .gossip import gossip_until
 from .rgg import Graph
+from .routing import accumulate_route_sends, batched_greedy_routes
+
+_ROUTE_BLOCK = 512  # iterations routed per batched router call
 
 __all__ = [
     "BaselineResult",
@@ -42,25 +60,16 @@ class BaselineResult:
         return float(np.linalg.norm(self.x - avg) / np.linalg.norm(x0))
 
 
-def _greedy_path(g: Graph, src: int, target_xy: np.ndarray) -> list[int]:
-    """Greedy geographic route; returns node list ending at the local
-    minimizer of distance-to-target (the message recipient)."""
-    coords = g.coords
-    cur = int(src)
-    d_cur = float((coords[cur, 0] - target_xy[0]) ** 2 + (coords[cur, 1] - target_xy[1]) ** 2)
-    path = [cur]
-    while True:
-        deg = g.degrees[cur]
-        if deg == 0:
-            return path
-        nbrs = g.neighbors[cur, :deg]
-        d = np.sum((coords[nbrs] - target_xy) ** 2, axis=1)
-        best = int(np.argmin(d))
-        if d[best] >= d_cur:
-            return path
-        cur = int(nbrs[best])
-        d_cur = float(d[best])
-        path.append(cur)
+def _block_routes(g: Graph, rng: np.random.Generator, count: int):
+    """Draw `count` (source, random-target) requests — in the exact
+    per-iteration order of the scalar reference, so trajectories are
+    reproducible draw-for-draw — and route them in one batched call."""
+    srcs = np.empty(count, np.int64)
+    targets = np.empty((count, 2))
+    for i in range(count):
+        srcs[i] = rng.integers(g.n)
+        targets[i] = rng.uniform(0.0, 1.0, 2)
+    return srcs, batched_greedy_routes(g, srcs, targets)
 
 
 def path_averaging(
@@ -94,40 +103,53 @@ def path_averaging(
     messages = 0
     it = 0
     converged = False
-    while it < max_iters:
-        for _ in range(check_every):
-            it += 1
-            src = int(rng.integers(n))
-            target = rng.uniform(0.0, 1.0, 2)
-            path = _greedy_path(g, src, target)
-            L = len(path) - 1
-            if L == 0:
-                # degenerate: src is already closest to the target
-                continue
+    while it < max_iters and not converged:
+        # a block is a whole number of convergence windows so checks land
+        # on the same global iteration counts as the scalar reference
+        # (which, like this loop, may overshoot max_iters by < check_every)
+        windows_left = -(-(max_iters - it) // check_every)
+        block = check_every * max(1, min(_ROUTE_BLOCK // check_every, windows_left))
+        _, routes = _block_routes(g, rng, block)
+        nodes, hops = routes.nodes, routes.hops
+        for w0 in range(0, block, check_every):
+            w1 = w0 + check_every
+            it += check_every
             if loss_p is None:
-                messages += 2 * L
-                node_sends[path[:-1]] += 1
-                node_sends[path[1:]] += 1
-                x[path] = np.mean(x[path])
+                messages += int(2 * hops[w0:w1].sum())
+                accumulate_route_sends(
+                    node_sends, nodes[w0:w1], hops[w0:w1]
+                )
+                for r in range(w0, w1):
+                    L = int(hops[r])
+                    if L == 0:
+                        continue  # degenerate: src already closest to target
+                    p = nodes[r, : L + 1]
+                    x[p] = x[p].mean()
             else:
-                # forward pass: hop t = path[t-1] -> path[t]
-                fwd_fail = rng.geometric(1.0 - loss_p)  # first failing hop
-                if fwd_fail <= L:
-                    messages += fwd_fail
-                    node_sends[path[:fwd_fail]] += 1
-                    continue
-                messages += L
-                node_sends[path[:-1]] += 1
-                avg = float(np.mean(x[path]))
-                # reply pass: hop t = path[L-t+1] -> path[L-t]
-                rep_fail = rng.geometric(1.0 - loss_p)
-                upd = min(rep_fail, L)
-                messages += upd
-                node_sends[path[L : L - upd : -1]] += 1
-                x[path[L - upd + 1 :]] = avg  # recipient + delivered prefix
-        if np.linalg.norm(x - mean) <= tol:
-            converged = True
-            break
+                fwd_fail = rng.geometric(1.0 - loss_p, size=w1 - w0)
+                rep_fail = rng.geometric(1.0 - loss_p, size=w1 - w0)
+                for r in range(w0, w1):
+                    L = int(hops[r])
+                    if L == 0:
+                        continue
+                    p = nodes[r, : L + 1]
+                    # forward pass: hop t = p[t-1] -> p[t]
+                    if fwd_fail[r - w0] <= L:
+                        f = int(fwd_fail[r - w0])
+                        messages += f
+                        node_sends[p[:f]] += 1
+                        continue
+                    messages += L
+                    node_sends[p[:-1]] += 1
+                    avg = float(x[p].mean())
+                    # reply pass: hop t = p[L-t+1] -> p[L-t]
+                    upd = int(min(rep_fail[r - w0], L))
+                    messages += upd
+                    node_sends[p[L : L - upd : -1]] += 1
+                    x[p[L - upd + 1 :]] = avg  # recipient + delivered prefix
+            if np.linalg.norm(x - mean) <= tol:
+                converged = True
+                break
     return BaselineResult(
         x=x, messages=messages, iterations=it, converged=converged,
         node_sends=node_sends,
@@ -154,25 +176,26 @@ def geographic_gossip(
     messages = 0
     it = 0
     converged = False
-    while it < max_iters:
-        for _ in range(check_every):
-            it += 1
-            src = int(rng.integers(n))
-            target = rng.uniform(0.0, 1.0, 2)
-            path = _greedy_path(g, src, target)
-            L = len(path) - 1
-            dst = path[-1]
-            if dst == src:
-                continue
-            messages += 2 * L
-            node_sends[path[:-1]] += 1
-            node_sends[path[1:]] += 1
-            avg = 0.5 * (x[src] + x[dst])
-            x[src] = avg
-            x[dst] = avg
-        if np.linalg.norm(x - mean) <= tol:
-            converged = True
-            break
+    while it < max_iters and not converged:
+        windows_left = -(-(max_iters - it) // check_every)
+        block = check_every * max(1, min(_ROUTE_BLOCK // check_every, windows_left))
+        srcs, routes = _block_routes(g, rng, block)
+        nodes, hops = routes.nodes, routes.hops
+        dsts = nodes[np.arange(block), hops]
+        for w0 in range(0, block, check_every):
+            w1 = w0 + check_every
+            it += check_every
+            messages += int(2 * hops[w0:w1].sum())
+            accumulate_route_sends(node_sends, nodes[w0:w1], hops[w0:w1])
+            for r in range(w0, w1):
+                if hops[r] == 0:
+                    continue
+                avg = 0.5 * (x[srcs[r]] + x[dsts[r]])
+                x[srcs[r]] = avg
+                x[dsts[r]] = avg
+            if np.linalg.norm(x - mean) <= tol:
+                converged = True
+                break
     return BaselineResult(
         x=x, messages=messages, iterations=it, converged=converged,
         node_sends=node_sends,

@@ -1,0 +1,277 @@
+"""Device-resident executor for a `HierarchyPlan` (the execute half of
+the plan/execute simulation core).
+
+One call runs all K levels of multiscale gossip end-to-end in a single
+compiled JAX function: per-level batched gossip (`gossip_core`),
+representative election (static, from the plan), Alg.-1 line-16
+reweighting and value promotion as gathers/scatters, send attribution as
+gathers through the plan's route-incidence CSR plus one scatter-add, and
+the dissemination down-pass as a gather — no host round-trips between
+levels.  The executor is `vmap`-ped over trial seeds, so
+`execute_plan(plan, x0, seeds=[s0..sT])` simulates T independent
+Monte-Carlo trials in one compiled call.
+
+Backends: ``backend="lax"`` is the reference inner kernel;
+``backend="pallas"`` routes each gossip chunk through the
+`kernels.cell_mixing` batched matmul (see `core.gossip`).  On non-TPU
+hosts the Pallas kernel runs in interpreter mode automatically.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .gossip import gossip_core
+from .plan import HierarchyPlan
+
+__all__ = ["EngineResult", "execute_plan", "fi_ticks"]
+
+# Lighter XLA pipeline for the executor: these are small scatter/gather
+# loops where full optimization buys nothing measurable at runtime but
+# more than doubles compile time (the single-shot benchmark bottleneck
+# on CPU).
+_COMPILER_OPTS = {"xla_backend_optimization_level": 0}
+
+
+def fi_ticks(size: int, eps: float, scale: float, quadratic: bool) -> int:
+    """Fixed-iterations budget (paper §VII): the theoretical
+    epsilon-averaging-time bound for the worst-case graph size at the
+    level — Theta(p^2 log 1/eps) ticks for p-node grids, Theta(p log
+    1/eps) for the (near-complete) finest cells (Boyd et al. [2])."""
+    ln = math.log(1.0 / eps)
+    if quadratic:
+        budget = 0.5 * size * size * ln
+    else:
+        budget = 4.0 * size * ln
+    return max(32, math.ceil(scale * budget))
+
+
+def trials_error(x_final: np.ndarray, x0: np.ndarray) -> np.ndarray:
+    """(T,) relative error per trial (paper eq. 1); x0 may be (n,)
+    shared or (T, n) per-trial."""
+    x0 = np.asarray(x0)
+    avg = x0.mean(axis=-1, keepdims=True)
+    num = np.linalg.norm(x_final - avg, axis=-1)
+    den = np.linalg.norm(np.broadcast_to(x0, x_final.shape), axis=-1)
+    return num / den
+
+
+@dataclasses.dataclass
+class EngineResult:
+    """Per-trial outputs of one vmapped plan execution (T trials)."""
+
+    x_final: np.ndarray          # (T, n) estimates at every node
+    messages: np.ndarray         # (T,) total single-hop transmissions
+    node_sends: np.ndarray       # (T, n) transmissions attributed per node
+    level_messages: np.ndarray   # (T, L) per executed level
+    level_ticks: np.ndarray      # (T, L) max ticks over the level's graphs
+    level_converged: np.ndarray  # (T, L) fraction of graphs converged
+    edge_usage: list             # L arrays (T, B, C, D) exchange counts
+    #                              (only when run with collect_usage=True)
+    backend: str
+
+    @property
+    def trials(self) -> int:
+        return int(self.x_final.shape[0])
+
+    def error(self, x0: np.ndarray) -> np.ndarray:
+        """(T,) relative error per trial; see `trials_error`."""
+        return trials_error(self.x_final, x0)
+
+
+def _level_consts(lp):
+    c = {
+        "neighbors": jnp.asarray(lp.neighbors, jnp.int32),
+        "degrees": jnp.asarray(lp.degrees, jnp.int32),
+        "n_nodes": jnp.asarray(lp.n_nodes, jnp.int32),
+        "node_mask": jnp.asarray(lp.node_mask, bool),
+        "edge_hops": jnp.asarray(lp.edge_hops, jnp.int32),
+        "slot_node": jnp.asarray(lp.slot_node, jnp.int32),
+    }
+    if lp.kind == "cells":
+        c["partner_node"] = jnp.asarray(lp.partner_node, jnp.int32)
+    else:
+        for name in ("edge_b", "edge_i", "edge_si", "edge_j", "edge_sj",
+                     "inc_node", "inc_edge", "inc_count"):
+            c[name] = jnp.asarray(getattr(lp, name), jnp.int32)
+    if lp.rep_slot is not None:
+        c["rep_slot"] = jnp.asarray(lp.rep_slot, jnp.int32)
+        c["line16"] = jnp.asarray(lp.line16, jnp.float32)
+        c["next_graph"] = jnp.asarray(lp.next_graph, jnp.int32)
+        c["next_slot"] = jnp.asarray(lp.next_slot, jnp.int32)
+    return c
+
+
+def execute_plan(
+    plan: HierarchyPlan,
+    x0: np.ndarray,
+    *,
+    eps: float = 1e-4,
+    seeds: Sequence[int] = (0,),
+    weighted: bool = False,
+    fixed_ticks_scale: float = 0.0,
+    loss_p: Optional[float] = None,
+    max_ticks_per_level: int = 2_000_000,
+    check_every: int = 64,
+    backend: str = "lax",
+    interpret: Optional[bool] = None,
+    collect_usage: bool = False,
+) -> EngineResult:
+    """Execute `plan` for T = len(seeds) independent trials in one
+    compiled, vmapped call.
+
+    x0 may be (n,) — shared across trials — or (T, n) per-trial.  Each
+    seed drives one trial's exchange randomness; the plan (partition,
+    election, routes) is shared, so trials differ only in gossip noise.
+    `collect_usage=True` additionally returns the raw per-level exchange
+    counts (for attribution audits); leave it off on the hot path.
+    """
+    if backend not in ("lax", "pallas"):
+        raise ValueError(f"unknown backend {backend!r}")
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    n = plan.graph.n
+    x0 = np.asarray(x0, np.float32)
+    T = len(seeds)
+    per_trial_x0 = x0.ndim == 2
+    if per_trial_x0 and x0.shape[0] != T:
+        raise ValueError(f"x0 leading dim {x0.shape[0]} != trials {T}")
+    V = 2 if weighted else 1
+    L = len(plan.levels)
+    K = plan.k
+
+    # per-level loop config: eps / max_ticks are RUNTIME values (so the
+    # eps-oracle and fixed-iterations modes share one compiled executor);
+    # only the check cadence is static (scan length).
+    eps_levels, maxt_levels, chk_levels = [], [], []
+    for lp in plan.levels:
+        if fixed_ticks_scale > 0:
+            fixed = fi_ticks(
+                int(lp.n_nodes.max()), eps, fixed_ticks_scale,
+                quadratic=(lp.kind == "overlay"),
+            )
+            chk = max(1, min(check_every, fixed))
+            eps_levels.append(-1.0)  # negative tol: the oracle never fires
+            maxt_levels.append(((fixed + chk - 1) // chk) * chk)
+            chk_levels.append(chk)
+        else:
+            eps_levels.append(float(eps))
+            maxt_levels.append(int(max_ticks_per_level))
+            chk_levels.append(int(check_every))
+    # filled only when the executor must be (re)traced: a cache hit never
+    # touches the plan's big constant arrays again
+    consts: list = []
+
+    def _run(x0_row, key, eps_arr, maxt_arr):
+        node_sends = jnp.zeros(n + 1, jnp.int32)  # slot n swallows padding
+        lvl_msgs, lvl_ticks, lvl_conv, usages = [], [], [], []
+        xb = None
+        for li, (lp, c, chk) in enumerate(zip(plan.levels, consts, chk_levels)):
+            B = lp.num_graphs
+            if lp.kind == "cells":
+                vals = jnp.where(
+                    c["node_mask"], x0_row[jnp.clip(c["slot_node"], 0)], 0.0
+                )
+                if weighted:
+                    w = c["node_mask"].astype(jnp.float32)
+                    xb = jnp.stack([vals * w, w], axis=-1)
+                else:
+                    xb = vals[..., None]
+            x, usage, msgs, done, ticks = gossip_core(
+                xb, c["neighbors"], c["degrees"], c["n_nodes"],
+                c["edge_hops"], c["node_mask"],
+                eps_arr[li], jax.random.fold_in(key, li),
+                max_ticks=maxt_arr[li], check_every=chk, loss_p=loss_p,
+                backend=backend, interpret=interpret,
+            )
+            # per-graph counters stay int32 on device; they are summed on
+            # the host in int64 (jnp.sum would wrap without x64 mode)
+            lvl_msgs.append(msgs)
+            lvl_ticks.append(ticks.max())
+            lvl_conv.append(done.mean())
+            if collect_usage:
+                usages.append(usage)
+            # attribution: one scatter-add per level
+            if lp.kind == "cells":
+                idx = jnp.where(c["slot_node"] >= 0, c["slot_node"], n)
+                node_sends = node_sends.at[idx.ravel()].add(
+                    usage.sum(-1).ravel()
+                )
+                pidx = jnp.where(c["partner_node"] >= 0, c["partner_node"], n)
+                node_sends = node_sends.at[pidx.ravel()].add(usage.ravel())
+            else:
+                usage_e = (
+                    usage[c["edge_b"], c["edge_i"], c["edge_si"]]
+                    + usage[c["edge_b"], c["edge_j"], c["edge_sj"]]
+                )
+                node_sends = node_sends.at[c["inc_node"]].add(
+                    usage_e[c["inc_edge"]] * c["inc_count"]
+                )
+            # promotion (gathers; Alg.1 line 16 on the finest level)
+            if lp.rep_slot is not None:
+                v = x[jnp.arange(B), c["rep_slot"]]          # (B, V)
+                if weighted:
+                    v = v * c["n_nodes"][:, None].astype(jnp.float32)
+                else:
+                    v = v * c["line16"][:, None]
+                B2, C2 = plan.levels[li + 1].node_mask.shape
+                xb = jnp.zeros((B2, C2, V), jnp.float32).at[
+                    c["next_graph"], c["next_slot"]
+                ].set(v)
+        # final estimate + dissemination down-pass
+        est = x[..., 0] if V == 1 else x[..., 0] / jnp.maximum(x[..., 1], 1e-30)
+        x_final = est[plan.final_graph, plan.final_slot]
+        node_sends = node_sends[:n]
+        if plan.disseminate:
+            node_sends = node_sends + 1  # the n-message down-pass
+        return (
+            x_final, node_sends,
+            tuple(lvl_msgs), jnp.stack(lvl_ticks), jnp.stack(lvl_conv),
+            tuple(usages),
+        )
+
+    keys = jnp.stack([jax.random.PRNGKey(int(s)) for s in seeds])
+    args = (
+        jnp.asarray(x0),
+        keys,
+        jnp.asarray(eps_levels, jnp.float32),
+        jnp.asarray(maxt_levels, jnp.int32),
+    )
+    cache_key = (
+        T, per_trial_x0, weighted, loss_p, backend, interpret,
+        tuple(chk_levels), collect_usage,
+    )
+    fn = plan.exec_cache.get(cache_key)
+    if fn is None:
+        consts.extend(_level_consts(lp) for lp in plan.levels)
+        jitted = jax.jit(
+            jax.vmap(_run, in_axes=(0 if per_trial_x0 else None, 0, None, None))
+        )
+        try:
+            fn = jitted.lower(*args).compile(compiler_options=_COMPILER_OPTS)
+        except Exception:  # options unsupported on this backend
+            fn = jitted
+        plan.exec_cache[cache_key] = fn
+    xf, sends, lm, lt, lc, usages = fn(*args)
+    # host-side int64 reduction of the per-graph int32 counters
+    level_messages = np.stack(
+        [np.asarray(m, np.int64).sum(axis=1) for m in lm], axis=1
+    )
+    messages = level_messages.sum(axis=1)
+    if plan.disseminate:
+        messages = messages + n
+    return EngineResult(
+        x_final=np.asarray(xf),
+        messages=messages,
+        node_sends=np.asarray(sends, np.int64),
+        level_messages=level_messages,
+        level_ticks=np.asarray(lt, np.int64),
+        level_converged=np.asarray(lc, np.float64),
+        edge_usage=[np.asarray(u) for u in usages],
+        backend=backend,
+    )

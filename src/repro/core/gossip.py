@@ -19,6 +19,21 @@ transmission of an exchange succeeds w.p. `loss_p`; a lost request
 aborts the exchange, a lost reply leaves only the contacted node
 updated (mass distortion — exactly the failure the paper analyzes).
 
+Two execution backends produce the same exchange sequence (identical
+randomness, usage, and message accounting):
+
+* ``backend="lax"`` — the reference path: each tick updates the value
+  rows of the chosen pair directly;
+* ``backend="pallas"`` — each `check_every`-tick chunk accumulates its
+  pairwise averages into a (B, C, C) mixing matrix (identity plus row
+  averages) and applies it with the `kernels.cell_mixing` Pallas op, so
+  the batched pairwise-average inner kernel runs on the MXU.  Values
+  agree with the lax path up to f32 rounding.
+
+`gossip_core` is the pure-JAX function (usable inside a larger jit /
+vmap — the plan/execute engine in `core.engine` vmaps it over
+Monte-Carlo trial seeds); `gossip_until` is the host-facing wrapper.
+
 Shapes (static under jit):
   x         : (B, C, V)   node values, padded with 0
   neighbors : (B, C, D)   padded with -1
@@ -38,7 +53,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["GossipResult", "gossip_until", "batched_graphs"]
+__all__ = ["GossipResult", "gossip_core", "gossip_until", "batched_graphs"]
 
 
 @dataclasses.dataclass
@@ -116,8 +131,7 @@ def _one_tick(state, t, neighbors, degrees, n_nodes, edge_hops, key, loss_p):
     return (x, usage, msgs, done), None
 
 
-@partial(jax.jit, static_argnames=("max_ticks", "check_every", "loss_p"))
-def _gossip_loop(
+def gossip_core(
     x0,
     neighbors,
     degrees,
@@ -126,10 +140,22 @@ def _gossip_loop(
     node_mask,
     eps,
     key,
+    *,
     max_ticks: int,
     check_every: int,
     loss_p: Optional[float],
+    backend: str = "lax",
+    interpret: bool = False,
 ):
+    """Pure-JAX batched gossip loop; composable under jit and vmap.
+
+    Returns (x, usage, msgs, done, ticks).  `backend` selects the inner
+    pairwise-average kernel (see module docstring); the random exchange
+    sequence, usage, and message counts are backend-independent.
+    `eps` and `max_ticks` may be traced scalars (the plan/execute engine
+    passes them at runtime so eps-oracle and fixed-iteration runs share
+    one compilation); `check_every` must be static (scan length).
+    """
     B, C, D = neighbors.shape
     live = node_mask.astype(x0.dtype)[..., None]  # (B, C, 1)
     denom = jnp.maximum(live.sum(1), 1.0)
@@ -141,17 +167,27 @@ def _gossip_loop(
         d = (x - mean[:, None, :]) * live
         return jnp.sqrt((d**2).sum((1, 2)))
 
+    def tick(s, t):
+        return _one_tick(s, t, neighbors, degrees, n_nodes, edge_hops, key, loss_p)
+
     def chunk(carry):
         x, usage, msgs, done, ticks, t0 = carry
-        state = (x, usage, msgs, done)
-        state, _ = jax.lax.scan(
-            lambda s, t: _one_tick(
-                s, t, neighbors, degrees, n_nodes, edge_hops, key, loss_p
-            ),
-            state,
-            t0 + jnp.arange(check_every),
-        )
-        x, usage, msgs, done = state
+        ts = t0 + jnp.arange(check_every)
+        if backend == "lax":
+            (x, usage, msgs, done), _ = jax.lax.scan(
+                tick, (x, usage, msgs, done), ts
+            )
+        else:
+            # accumulate the chunk's pair averages into a mixing matrix
+            # (identity + row averages — _one_tick applied to rows of I),
+            # then apply it with the Pallas batched matmul kernel
+            from repro.kernels.cell_mixing import cell_mixing
+
+            eye = jnp.broadcast_to(jnp.eye(C, dtype=x.dtype), (B, C, C))
+            (m, usage, msgs, done), _ = jax.lax.scan(
+                tick, (eye, usage, msgs, done), ts
+            )
+            x = cell_mixing(m, x, rounds=1, use_pallas=True, interpret=interpret)
         ticks = ticks + jnp.where(done, 0, check_every)
         done = done | (err(x) <= tol)
         return (x, usage, msgs, done, ticks, t0 + check_every)
@@ -169,6 +205,32 @@ def _gossip_loop(
     return x, usage, msgs, done, ticks
 
 
+@partial(
+    jax.jit,
+    static_argnames=("max_ticks", "check_every", "loss_p", "backend", "interpret"),
+)
+def _gossip_loop(
+    x0,
+    neighbors,
+    degrees,
+    n_nodes,
+    edge_hops,
+    node_mask,
+    eps,
+    key,
+    max_ticks: int,
+    check_every: int,
+    loss_p: Optional[float],
+    backend: str = "lax",
+    interpret: bool = False,
+):
+    return gossip_core(
+        x0, neighbors, degrees, n_nodes, edge_hops, node_mask, eps, key,
+        max_ticks=max_ticks, check_every=check_every, loss_p=loss_p,
+        backend=backend, interpret=interpret,
+    )
+
+
 def gossip_until(
     x0: np.ndarray,
     neighbors: np.ndarray,
@@ -183,6 +245,8 @@ def gossip_until(
     check_every: int = 64,
     fixed_ticks: Optional[int] = None,
     loss_p: Optional[float] = None,
+    backend: str = "lax",
+    interpret: bool = False,
 ) -> GossipResult:
     """Run batched randomized gossip to eps-accuracy (or `fixed_ticks`).
 
@@ -191,6 +255,8 @@ def gossip_until(
     convergence oracle.  Convergence is re-checked every `check_every`
     ticks, so up to that many extra exchanges can occur after the true
     crossing (convergence detection is not free in reality either).
+    `backend`/`interpret` select the inner pairwise-average kernel (see
+    module docstring).
     """
     x0 = np.asarray(x0)
     if x0.ndim == 2:
@@ -219,6 +285,8 @@ def gossip_until(
         max_ticks=max_t,
         check_every=check,
         loss_p=loss_p,
+        backend=backend,
+        interpret=interpret,
     )
     return GossipResult(
         x=np.asarray(x),

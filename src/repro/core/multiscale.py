@@ -1,16 +1,29 @@
-"""Multiscale gossip — the paper's Algorithm 1.
+"""Multiscale gossip — the paper's Algorithm 1 (compatibility wrapper).
 
-Bottom-up execution over the recursive partition:
+This module is now a thin facade over the plan/execute simulation core:
+
+* `core.plan.build_plan` runs the ahead-of-time pass — recursive
+  partition, induced-subgraph batches, overlay grid edges, representative
+  election, batched greedy-geographic routes as padded arrays, and
+  route-incidence CSR attribution;
+* `core.engine.execute_plan` runs all K levels on device in one compiled
+  call (batched gossip, Alg.-1 line-16 reweighting, promotion and
+  dissemination as gathers), `vmap`-ped over Monte-Carlo trial seeds.
+
+`multiscale_gossip(...)` keeps its historical signature and
+`MultiscaleResult` shape; `trials=T` returns a `MultiscaleTrials` with
+per-trial arrays from one vmapped execution, and `plan=` reuses a
+prebuilt `HierarchyPlan` across calls (trial t of a batched run equals a
+single run with seed `seed + t` on the same plan).
+
+Algorithm recap (paper Alg. 1):
 
   1. level k (finest): randomized gossip inside every cell's induced
      subgraph; elect a representative per cell; reweight its value by
      |cell| * (#present sibling cells) / |parent|  (Alg. 1 line 16).
-  2. levels j = k-1 .. 1: representatives of level-(j+1) cells form a
-     grid graph per level-j cell (edges between N/S/E/W-adjacent sibling
-     cells); gossip runs on all grids of the level in parallel, every
-     exchange costing 2 * hops single-hop transmissions via greedy
-     geographic routing on the base graph; elect a level-j
-     representative per grid.
+  2. levels j = k-1 .. 1: representatives form a grid graph per level-j
+     cell; every exchange costs 2 * hops single-hop transmissions via
+     greedy geographic routing on the base graph.
   3. after the level-1 grid converges, every level-2 representative
      disseminates its value to its cell (n messages total).
 
@@ -27,17 +40,21 @@ synchronization it implies) at the cost of redundant messages.
 from __future__ import annotations
 
 import dataclasses
-import math
-from typing import Optional
+from typing import Optional, Union
 
 import numpy as np
 
-from .gossip import GossipResult, batched_graphs, gossip_until
-from .partition import Partition, build_partition
-from .rgg import Graph, induced_subgraph
-from .routing import Route, route_to_node
+from .engine import EngineResult, execute_plan, trials_error
+from .partition import Partition
+from .plan import HierarchyPlan, build_plan
+from .rgg import Graph
 
-__all__ = ["MultiscaleResult", "LevelReport", "multiscale_gossip"]
+__all__ = [
+    "MultiscaleResult",
+    "MultiscaleTrials",
+    "LevelReport",
+    "multiscale_gossip",
+]
 
 
 @dataclasses.dataclass
@@ -67,88 +84,50 @@ class MultiscaleResult:
         return float(np.linalg.norm(self.x_final - avg) / np.linalg.norm(x0))
 
 
-def _elect(
-    rng: np.random.Generator,
-    mode: str,
-    member_nodes: np.ndarray,
-    coords: np.ndarray,
-    center: np.ndarray,
-) -> int:
-    if mode == "random":
-        return int(member_nodes[rng.integers(len(member_nodes))])
-    d = np.sum((coords[member_nodes] - center) ** 2, axis=1)
-    return int(member_nodes[int(np.argmin(d))])
+@dataclasses.dataclass
+class MultiscaleTrials:
+    """T Monte-Carlo trials from one vmapped plan execution: trial t is
+    bit-equivalent to a single run with seed `seeds[t]` on `plan`."""
+
+    x_final: np.ndarray       # (T, n)
+    messages: np.ndarray      # (T,)
+    node_sends: np.ndarray    # (T, n)
+    seeds: tuple              # per-trial gossip seeds
+    levels: list[LevelReport]  # trial-averaged per-level reports
+    rep_counts: np.ndarray    # (n,) — shared: election is part of the plan
+    disconnected_cells: int
+    partition: Partition
+    backend: str
+
+    @property
+    def trials(self) -> int:
+        return int(self.x_final.shape[0])
+
+    def error(self, x0: np.ndarray) -> np.ndarray:
+        """(T,) per-trial relative error; x0 is (n,) or (T, n)."""
+        return trials_error(self.x_final, x0)
 
 
-def _grid_components(num: int, edges: np.ndarray) -> np.ndarray:
-    """Union-find component labels for a small local graph."""
-    parent = np.arange(num)
-
-    def find(u):
-        while parent[u] != u:
-            parent[u] = parent[parent[u]]
-            u = parent[u]
-        return u
-
-    for u, v in edges:
-        ru, rv = find(int(u)), find(int(v))
-        if ru != rv:
-            parent[ru] = rv
-    return np.array([find(u) for u in range(num)])
-
-
-def _connect_components(
-    local_edges: list, coords: np.ndarray, num: int
-) -> list:
-    """Add nearest-pair edges until the local rep graph is connected
-    (handles empty sibling cells — paper §VII 'disconnected grids')."""
-    if num <= 1:
-        return local_edges
-    while True:
-        comp = _grid_components(num, np.asarray(local_edges, np.int64).reshape(-1, 2))
-        labels = np.unique(comp)
-        if len(labels) == 1:
-            return local_edges
-        # connect the first component to its nearest outside vertex
-        a = np.where(comp == labels[0])[0]
-        b = np.where(comp != labels[0])[0]
-        d = np.sum((coords[a][:, None, :] - coords[b][None, :, :]) ** 2, axis=2)
-        ia, ib = np.unravel_index(int(np.argmin(d)), d.shape)
-        local_edges.append((int(a[ia]), int(b[ib])))
-
-
-class _OverlayGraph:
-    """Duck-typed graph (n / max_deg / neighbors / degrees) for batching."""
-
-    def __init__(self, num: int, edges: np.ndarray, hops: np.ndarray):
-        self.n = num
-        nbrs: list[list[int]] = [[] for _ in range(num)]
-        hp: list[list[int]] = [[] for _ in range(num)]
-        for (u, v), h in zip(edges, hops):
-            nbrs[u].append(int(v))
-            hp[u].append(int(h))
-            nbrs[v].append(int(u))
-            hp[v].append(int(h))
-        self.max_deg = max(1, max((len(r) for r in nbrs), default=1))
-        self.neighbors = np.full((num, self.max_deg), -1, np.int32)
-        self.edge_hops = np.ones((num, self.max_deg), np.int32)
-        self.degrees = np.array([len(r) for r in nbrs], np.int32)
-        for u in range(num):
-            self.neighbors[u, : len(nbrs[u])] = nbrs[u]
-            self.edge_hops[u, : len(hp[u])] = hp[u]
-
-
-def _fi_ticks(size: int, eps: float, scale: float, quadratic: bool) -> int:
-    """Fixed-iterations budget (paper §VII): the theoretical
-    epsilon-averaging-time bound for the worst-case graph size at the
-    level — Theta(p^2 log 1/eps) ticks for p-node grids, Theta(p log
-    1/eps) for the (near-complete) finest cells (Boyd et al. [2])."""
-    ln = math.log(1.0 / eps)
-    if quadratic:
-        budget = 0.5 * size * size * ln
-    else:
-        budget = 4.0 * size * ln
-    return max(32, math.ceil(scale * budget))
+def _level_reports(
+    plan: HierarchyPlan, res: EngineResult, n: int
+) -> list[LevelReport]:
+    """Per-level reports (averaged over trials for T > 1)."""
+    out = []
+    for li, lp in enumerate(plan.levels):
+        out.append(LevelReport(
+            level=lp.level,
+            num_graphs=lp.num_graphs,
+            messages=int(res.level_messages[:, li].mean()),
+            max_ticks=int(res.level_ticks[:, li].max()),
+            converged_frac=float(res.level_converged[:, li].mean()),
+            max_hops=lp.max_hops,
+            graph_sizes=lp.graph_sizes,
+        ))
+    out.append(LevelReport(
+        level=0, num_graphs=0, messages=n if plan.disseminate else 0,
+        max_ticks=0, converged_frac=1.0, max_hops=1, graph_sizes=(0, 0.0, 0),
+    ))
+    return out
 
 
 def multiscale_gossip(
@@ -165,285 +144,48 @@ def multiscale_gossip(
     fixed_ticks_scale: float = 0.0,
     loss_p: Optional[float] = None,
     max_ticks_per_level: int = 2_000_000,
-) -> MultiscaleResult:
-    rng = np.random.default_rng(seed)
+    trials: int = 1,
+    backend: str = "lax",
+    plan: Optional[HierarchyPlan] = None,
+) -> Union[MultiscaleResult, MultiscaleTrials]:
+    """Run multiscale gossip (Alg. 1); see module docstring.
+
+    With `trials=T` all T trials execute in one compiled vmapped call
+    (seeds `seed .. seed+T-1`) and a `MultiscaleTrials` is returned.
+    Pass `plan=` to reuse a prebuilt `HierarchyPlan` (then `k`, `a`,
+    `cell_max`, `rep_mode` are taken from the plan and `seed` only
+    drives the gossip randomness).
+    """
+    if plan is None:
+        plan = build_plan(
+            g, k=k, a=a, cell_max=cell_max, seed=seed, rep_mode=rep_mode
+        )
     n = g.n
-    part = build_partition(n, k=k, a=a, cell_max=cell_max)
-    K = part.k
-    node_sends = np.zeros(n, np.int64)
-    rep_counts = np.zeros(n, np.int64)
-    levels: list[LevelReport] = []
-    messages = 0
-    V = 2 if weighted else 1
-
-    def pack(vals, ws):
-        if weighted:
-            return np.stack([vals * ws, ws], axis=-1)
-        return vals[..., None]
-
-    # ---------------- level k: gossip inside finest cells ----------------
-    cell_of_node = part.cell_of(g.coords, K)
-    present_cells = np.unique(cell_of_node)
-    members = {int(c): np.where(cell_of_node == c)[0] for c in present_cells}
-    subgraphs, sub_ids = [], []
-    for c in present_cells:
-        sg, ids = induced_subgraph(g, members[int(c)])
-        subgraphs.append(sg)
-        sub_ids.append(ids)
-    disconnected = sum(0 if sg.is_connected() else 1 for sg in subgraphs)
-
-    neighbors, degrees, n_nodes, mask = batched_graphs(subgraphs)
-    B, C = mask.shape
-    xb = np.zeros((B, C), np.float32)
-    for b, ids in enumerate(sub_ids):
-        xb[b, : len(ids)] = x0[ids]
-    wb = mask.astype(np.float32)  # unit mass per node
-    fixed = (
-        _fi_ticks(int(n_nodes.max()), eps, fixed_ticks_scale, quadratic=False)
-        if fixed_ticks_scale > 0
-        else None
+    seeds = tuple(int(seed) + t for t in range(trials))
+    res = execute_plan(
+        plan, x0, eps=eps, seeds=seeds, weighted=weighted,
+        fixed_ticks_scale=fixed_ticks_scale, loss_p=loss_p,
+        max_ticks_per_level=max_ticks_per_level, backend=backend,
     )
-    res = gossip_until(
-        pack(xb, wb),
-        neighbors,
-        degrees,
-        n_nodes,
-        eps=eps,
-        seed=int(rng.integers(2**31)),
-        max_ticks=max_ticks_per_level,
-        fixed_ticks=fixed,
-        loss_p=loss_p,
-    )
-    messages += res.total_messages
-    _attribute_base_sends(node_sends, res, sub_ids, neighbors)
-    levels.append(_report(K, res, n_nodes, max_hops=1))
-
-    # representatives of finest cells + Alg.1 line 16 reweighting
-    centers = part.cell_center(K, present_cells)
-    rep_node = np.zeros(len(present_cells), np.int64)
-    rep_val = np.zeros((len(present_cells), V), np.float32)
-    est = res.estimates()
-    for idx, c in enumerate(present_cells):
-        ids = sub_ids[idx]
-        local = _elect(rng, rep_mode, np.arange(len(ids)), g.coords[ids], centers[idx])
-        rep_node[idx] = ids[local]
-        rep_counts[ids[local]] += 1
-        if weighted:
-            # promote the full cell mass: channels * cell size
-            rep_val[idx] = res.x[idx, local] * len(ids)
-        else:
-            rep_val[idx, 0] = est[idx, local]
-    if not weighted and K >= 2:
-        # reweight by |cell| * m_present / |parent|  (line 16)
-        parents = part.parent_cell(K, present_cells)
-        cell_sizes = np.array([len(sub_ids[i]) for i in range(len(present_cells))])
-        for p in np.unique(parents):
-            sel = parents == p
-            n_parent = int(cell_sizes[sel].sum())
-            m_present = int(sel.sum())
-            rep_val[sel, 0] *= cell_sizes[sel] * m_present / n_parent
-
-    cur_cells = present_cells  # flat ids at level K
-    cur_level = K
-
-    # ---------------- levels k-1 .. 1: gossip on overlay grids ----------------
-    while cur_level > 1:
-        j = cur_level - 1  # parent level whose cells host the grids
-        parents = part.parent_cell(cur_level, cur_cells)
-        cell_pos = {int(c): i for i, c in enumerate(cur_cells)}
-        all_edges = part.child_grid_edges(j)
-        # group present child cells by parent
-        order = np.argsort(parents, kind="stable")
-        uniq_parents, starts = np.unique(parents[order], return_index=True)
-        groups = np.split(order, starts[1:])
-
-        overlay_graphs, group_members, route_maps, level_max_hops = [], [], [], 1
-        for grp in groups:
-            cells_here = cur_cells[grp]
-            local = {int(c): i for i, c in enumerate(cells_here)}
-            edges = [
-                (local[int(u)], local[int(v)])
-                for u, v in all_edges
-                if int(u) in local and int(v) in local
-            ]
-            rep_xy = g.coords[rep_node[grp]]
-            edges = _connect_components(edges, rep_xy, len(grp))
-            routes: list[Route] = []
-            hops = []
-            for u, v in edges:
-                r = route_to_node(g, int(rep_node[grp[u]]), int(rep_node[grp[v]]))
-                routes.append(r)
-                hops.append(max(1, r.hops))
-            level_max_hops = max(level_max_hops, max(hops, default=1))
-            overlay_graphs.append(
-                _OverlayGraph(len(grp), np.asarray(edges, np.int64).reshape(-1, 2),
-                              np.asarray(hops, np.int64))
-            )
-            group_members.append(grp)
-            route_maps.append((edges, routes))
-
-        neighbors, degrees, n_nodes, mask = batched_graphs(overlay_graphs)
-        Bg, Cg = mask.shape
-        edge_hops = np.ones((Bg, Cg, neighbors.shape[2]), np.int32)
-        xb = np.zeros((Bg, Cg, V), np.float32)
-        for b, og in enumerate(overlay_graphs):
-            edge_hops[b, : og.n, : og.max_deg] = og.edge_hops
-            xb[b, : og.n] = rep_val[group_members[b]]
-        fixed = (
-            _fi_ticks(int(n_nodes.max()), eps, fixed_ticks_scale, quadratic=True)
-            if fixed_ticks_scale > 0
-            else None
+    reports = _level_reports(plan, res, n)
+    if trials == 1:
+        return MultiscaleResult(
+            x_final=res.x_final[0],
+            messages=int(res.messages[0]),
+            levels=reports,
+            node_sends=res.node_sends[0],
+            rep_counts=plan.rep_counts.copy(),
+            disconnected_cells=plan.disconnected_cells,
+            partition=plan.partition,
         )
-        res = gossip_until(
-            xb,
-            neighbors,
-            degrees,
-            n_nodes,
-            eps=eps,
-            seed=int(rng.integers(2**31)),
-            edge_hops=edge_hops,
-            max_ticks=max_ticks_per_level,
-            fixed_ticks=fixed,
-            loss_p=loss_p,
-        )
-        messages += res.total_messages
-        _attribute_overlay_sends(node_sends, res, overlay_graphs, route_maps, n)
-        levels.append(_report(j, res, n_nodes, max_hops=level_max_hops))
-
-        if j == 1:
-            # level-1 grid done: reps of level-2 cells hold the estimate
-            final_val_of_cell = dict(
-                zip(cur_cells.tolist(), res.estimates()[_flat_index(group_members)])
-            )
-            break
-
-        # elect a level-j representative per grid; promote gossiped value
-        centers = part.cell_center(j, uniq_parents)
-        new_rep_node = np.zeros(len(groups), np.int64)
-        new_rep_val = np.zeros((len(groups), V), np.float32)
-        for b, grp in enumerate(group_members):
-            local_sel = _elect(
-                rng,
-                rep_mode,
-                np.arange(len(grp)),
-                g.coords[rep_node[grp]],
-                centers[b],
-            )
-            node = int(rep_node[grp[local_sel]])
-            new_rep_node[b] = node
-            rep_counts[node] += 1
-            if weighted:
-                # gossiped channels are per-rep averages; promote total mass
-                new_rep_val[b] = res.x[b, local_sel] * len(grp)
-            else:
-                new_rep_val[b, 0] = res.x[b, local_sel, 0]
-        rep_node, rep_val = new_rep_node, new_rep_val
-        cur_cells = uniq_parents
-        cur_level = j
-
-    # ---------------- dissemination down-pass (n messages) ----------------
-    x_final = np.zeros(n, np.float32)
-    if K == 1:
-        # degenerate single-level run == plain randomized gossip; every
-        # node already holds its estimate, nothing to disseminate
-        x_final[sub_ids[0]] = est[0, : len(sub_ids[0])]
-    else:
-        lvl2_cells = part.cell_of(g.coords, 2)
-        for c, val in final_val_of_cell.items():
-            x_final[lvl2_cells == c] = val
-        messages += n
-        node_sends += 1
-    levels.append(
-        LevelReport(
-            level=0,
-            num_graphs=0,
-            messages=n if K >= 2 else 0,
-            max_ticks=0,
-            converged_frac=1.0,
-            max_hops=1,
-            graph_sizes=(0, 0.0, 0),
-        )
+    return MultiscaleTrials(
+        x_final=res.x_final,
+        messages=res.messages,
+        node_sends=res.node_sends,
+        seeds=seeds,
+        levels=reports,
+        rep_counts=plan.rep_counts.copy(),
+        disconnected_cells=plan.disconnected_cells,
+        partition=plan.partition,
+        backend=backend,
     )
-    return MultiscaleResult(
-        x_final=x_final,
-        messages=messages,
-        levels=levels,
-        node_sends=node_sends,
-        rep_counts=rep_counts,
-        disconnected_cells=disconnected,
-        partition=part,
-    )
-
-
-def _flat_index(group_members: list) -> tuple[np.ndarray, np.ndarray]:
-    """(batch_index, local_index) covering all members, ordered so that the
-    concatenation matches np.concatenate(group_members)."""
-    b = np.concatenate(
-        [np.full(len(grp), i, np.int64) for i, grp in enumerate(group_members)]
-    )
-    l = np.concatenate([np.arange(len(grp), dtype=np.int64) for grp in group_members])
-    # reorder to ascending original member id
-    order = np.argsort(np.concatenate(group_members), kind="stable")
-    inv = np.empty_like(order)
-    inv[order] = np.arange(len(order))
-    return b[inv], l[inv]
-
-
-def _report(level: int, res: GossipResult, n_nodes: np.ndarray, max_hops: int) -> LevelReport:
-    return LevelReport(
-        level=level,
-        num_graphs=len(n_nodes),
-        messages=int(res.messages.sum()),
-        max_ticks=int(res.ticks.max()),
-        converged_frac=float(res.converged.mean()),
-        max_hops=int(max_hops),
-        graph_sizes=(int(n_nodes.min()), float(n_nodes.mean()), int(n_nodes.max())),
-    )
-
-
-def _attribute_base_sends(
-    node_sends: np.ndarray,
-    res: GossipResult,
-    sub_ids: list,
-    neighbors: np.ndarray,
-) -> None:
-    """Single-hop exchanges: initiator and partner each transmit once."""
-    usage = res.edge_usage
-    for b, ids in enumerate(sub_ids):
-        out_counts = usage[b, : len(ids)].sum(axis=1)
-        node_sends[ids] += out_counts
-        nbr = neighbors[b, : len(ids)]
-        u = usage[b, : len(ids)]
-        valid = nbr >= 0
-        np.add.at(
-            node_sends,
-            ids[nbr[valid]],
-            u[valid],
-        )
-
-
-def _attribute_overlay_sends(
-    node_sends: np.ndarray,
-    res: GossipResult,
-    overlay_graphs: list,
-    route_maps: list,
-    n: int,
-) -> None:
-    """Multi-hop exchanges: every node along the route transmits (forward
-    senders nodes[0..L-1], reply senders nodes[L..1])."""
-    for b, og in enumerate(overlay_graphs):
-        edges, routes = route_maps[b]
-        usage = res.edge_usage[b]
-        # map (u, local neighbor slot) -> edge index
-        slot_of = {}
-        deg_ptr = [0] * og.n
-        for e_idx, (u, v) in enumerate(edges):
-            slot_of[(u, og.neighbors[u].tolist().index(v))] = e_idx
-            slot_of[(v, og.neighbors[v].tolist().index(u))] = e_idx
-        for u in range(og.n):
-            for s in range(og.degrees[u]):
-                c = int(usage[u, s])
-                if c == 0:
-                    continue
-                e_idx = slot_of[(u, s)]
-                node_sends += c * routes[e_idx].send_counts(n)

@@ -1,0 +1,449 @@
+"""Ahead-of-time hierarchy planning for the plan/execute simulation core.
+
+The multiscale simulation splits into two halves:
+
+* **plan** (this module, host/numpy): everything that depends only on
+  the deployment — the recursive partition, induced-subgraph batches for
+  every level, overlay grid edges (with nearest-pair augmentation for
+  disconnected grids), representative election, batched greedy-geographic
+  routes between representatives as padded arrays, and per-edge
+  route-incidence CSR arrays so node-send attribution is a single
+  scatter-add.  None of it depends on node *values*, so one plan serves
+  any number of Monte-Carlo trials.
+* **execute** (`core.engine`, device/JAX): runs all K levels through the
+  batched gossip engine with promotion/reweighting expressed as
+  gathers, `vmap`-able over trial seeds.
+
+A `HierarchyPlan` is built once per (graph, partition, election seed)
+and is reusable across trials, eps targets, weighted/unweighted modes,
+loss models, and engine backends.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from .gossip import batched_graphs
+from .partition import Partition, build_partition
+from .rgg import Graph, induced_subgraph
+from .routing import BatchedRoutes, batched_routes_to_nodes
+
+__all__ = ["LevelPlan", "HierarchyPlan", "build_plan", "overlay_node_sends"]
+
+
+@dataclasses.dataclass(frozen=True)
+class LevelPlan:
+    """One hierarchy level, fully batched (B graphs, C slots, D slots/row).
+
+    `kind == "cells"`: induced subgraphs of the finest cells; exchanges
+    are single-hop.  `kind == "overlay"`: grids of representatives; each
+    directed slot carries the greedy-route hop count of its edge.
+    """
+
+    level: int               # paper level: k (finest) down to 1 (top grid)
+    kind: str                # "cells" | "overlay"
+    neighbors: np.ndarray    # (B, C, D) int32, padded with -1
+    degrees: np.ndarray      # (B, C) int32
+    n_nodes: np.ndarray      # (B,) int32
+    node_mask: np.ndarray    # (B, C) bool
+    edge_hops: np.ndarray    # (B, C, D) int32 (all 1 for "cells")
+    slot_node: np.ndarray    # (B, C) int32 global node id per slot, -1 pad
+    max_hops: int            # longest routed exchange at this level
+    # -- attribution --------------------------------------------------------
+    # cells: global id of the partner in each directed slot (-1 pad)
+    partner_node: Optional[np.ndarray]       # (B, C, D) int32
+    # overlay: gather indices mapping each undirected edge e to its two
+    # directed usage slots, plus the route-incidence CSR (entry p says:
+    # node inc_node[p] transmits inc_count[p] times per use of edge
+    # inc_edge[p]) — attribution is usage_e gathered then scatter-added.
+    edge_b: Optional[np.ndarray]             # (E,) int32 graph index
+    edge_i: Optional[np.ndarray]             # (E,) int32 endpoint slots
+    edge_si: Optional[np.ndarray]            # (E,) int32 slot of v in i's row
+    edge_j: Optional[np.ndarray]             # (E,)
+    edge_sj: Optional[np.ndarray]            # (E,)
+    inc_node: Optional[np.ndarray]           # (NNZ,) int32 global node ids
+    inc_edge: Optional[np.ndarray]           # (NNZ,) int32 edge index
+    inc_count: Optional[np.ndarray]          # (NNZ,) int32 sends per use
+    routes: Optional[BatchedRoutes]          # the padded routes themselves
+    # -- promotion to the next (coarser) level; None on the last level ------
+    rep_slot: Optional[np.ndarray]           # (B,) int32 elected rep slot
+    rep_node: Optional[np.ndarray]           # (B,) int64 global node id
+    line16: Optional[np.ndarray]             # (B,) f32 Alg.1 line-16 factor
+    next_graph: Optional[np.ndarray]         # (B,) int32 graph at next level
+    next_slot: Optional[np.ndarray]          # (B,) int32 slot at next level
+
+    @property
+    def num_graphs(self) -> int:
+        return int(self.neighbors.shape[0])
+
+    @property
+    def graph_sizes(self) -> tuple:
+        return (
+            int(self.n_nodes.min()),
+            float(self.n_nodes.mean()),
+            int(self.n_nodes.max()),
+        )
+
+
+@dataclasses.dataclass(eq=False)
+class HierarchyPlan:
+    """The full ahead-of-time pass: partition + per-level batches +
+    routes + attribution, value-independent and trial-reusable."""
+
+    graph: Graph
+    partition: Partition
+    levels: tuple            # LevelPlan, execution order: cells first, 1 last
+    rep_counts: np.ndarray   # (n,) int64 — election is part of the plan
+    disconnected_cells: int  # finest cells whose induced subgraph splits
+    final_graph: np.ndarray  # (n,) int32 — where each node reads its
+    final_slot: np.ndarray   # (n,) int32   final estimate (last level's x)
+    disseminate: bool        # K >= 2: down-pass costs n messages
+    seed: int
+    rep_mode: str
+    # compiled-executor cache, keyed by engine config (see core.engine)
+    exec_cache: dict = dataclasses.field(default_factory=dict, repr=False)
+
+    @property
+    def k(self) -> int:
+        return self.partition.k
+
+
+def _elect(
+    rng: np.random.Generator,
+    mode: str,
+    num: int,
+    coords: np.ndarray,
+    center: np.ndarray,
+) -> int:
+    """Local index of the representative among `num` members."""
+    if mode == "first":
+        return 0
+    if mode == "random":
+        return int(rng.integers(num))
+    d = np.sum((coords - center) ** 2, axis=1)
+    return int(np.argmin(d))
+
+
+def _grid_components(num: int, edges: np.ndarray) -> np.ndarray:
+    """Union-find component labels for a small local graph."""
+    parent = np.arange(num)
+
+    def find(u):
+        while parent[u] != u:
+            parent[u] = parent[parent[u]]
+            u = parent[u]
+        return u
+
+    for u, v in edges:
+        ru, rv = find(int(u)), find(int(v))
+        if ru != rv:
+            parent[ru] = rv
+    return np.array([find(u) for u in range(num)])
+
+
+def _connect_components(local_edges: list, coords: np.ndarray, num: int) -> list:
+    """Add nearest-pair edges until the local rep graph is connected
+    (handles empty sibling cells — paper §VII 'disconnected grids')."""
+    if num <= 1:
+        return local_edges
+    while True:
+        comp = _grid_components(
+            num, np.asarray(local_edges, np.int64).reshape(-1, 2)
+        )
+        labels = np.unique(comp)
+        if len(labels) == 1:
+            return local_edges
+        a = np.where(comp == labels[0])[0]
+        b = np.where(comp != labels[0])[0]
+        d = np.sum((coords[a][:, None, :] - coords[b][None, :, :]) ** 2, axis=2)
+        ia, ib = np.unravel_index(int(np.argmin(d)), d.shape)
+        local_edges.append((int(a[ia]), int(b[ib])))
+
+
+class _OverlayGraph:
+    """Duck-typed graph (n / max_deg / neighbors / degrees) for batching,
+    tracking which row slot each undirected edge landed in."""
+
+    def __init__(self, num: int, edges: np.ndarray, hops: np.ndarray):
+        self.n = num
+        nbrs: list[list[int]] = [[] for _ in range(num)]
+        hp: list[list[int]] = [[] for _ in range(num)]
+        self.slot_i = np.zeros(len(edges), np.int32)  # slot of v in u's row
+        self.slot_j = np.zeros(len(edges), np.int32)  # slot of u in v's row
+        for e, ((u, v), h) in enumerate(zip(edges, hops)):
+            self.slot_i[e] = len(nbrs[u])
+            nbrs[u].append(int(v))
+            hp[u].append(int(h))
+            self.slot_j[e] = len(nbrs[v])
+            nbrs[v].append(int(u))
+            hp[v].append(int(h))
+        self.max_deg = max(1, max((len(r) for r in nbrs), default=1))
+        self.neighbors = np.full((num, self.max_deg), -1, np.int32)
+        self.edge_hops = np.ones((num, self.max_deg), np.int32)
+        self.degrees = np.array([len(r) for r in nbrs], np.int32)
+        for u in range(num):
+            self.neighbors[u, : len(nbrs[u])] = nbrs[u]
+            self.edge_hops[u, : len(hp[u])] = hp[u]
+
+
+def _route_incidence(routes: BatchedRoutes) -> tuple:
+    """CSR incidence (inc_node, inc_edge, inc_count) of padded routes:
+    one request+reply exchange over edge e makes its path endpoints
+    transmit once and interior nodes twice (2 * hops total)."""
+    E, W = routes.nodes.shape
+    col = np.arange(W)[None, :]
+    hops = routes.hops[:, None]
+    on_path = (col <= hops) & (routes.nodes >= 0)
+    count = np.where((col == 0) | (col == hops), 1, 2)
+    e_idx = np.broadcast_to(np.arange(E)[:, None], (E, W))
+    keep = on_path & (hops > 0)
+    return (
+        routes.nodes[keep].astype(np.int32),
+        e_idx[keep].astype(np.int32),
+        count[keep].astype(np.int32),
+    )
+
+
+def overlay_node_sends(
+    lp: LevelPlan, usage: np.ndarray, n: int
+) -> np.ndarray:
+    """Reference (numpy) overlay attribution: per-edge exchange counts
+    gathered from the directed usage array, scatter-added through the
+    route-incidence CSR.  The engine runs the same computation in JAX."""
+    usage_e = (
+        usage[lp.edge_b, lp.edge_i, lp.edge_si]
+        + usage[lp.edge_b, lp.edge_j, lp.edge_sj]
+    ).astype(np.int64)
+    sends = np.zeros(n, np.int64)
+    np.add.at(sends, lp.inc_node, usage_e[lp.inc_edge] * lp.inc_count)
+    return sends
+
+
+def build_plan(
+    g: Graph,
+    *,
+    k: Optional[int] = None,
+    a: float = 2.0 / 3.0,
+    cell_max: float = 8.0,
+    seed: int = 0,
+    rep_mode: str = "random",
+) -> HierarchyPlan:
+    """One ahead-of-time pass over the deployment: partition, batched
+    induced subgraphs, overlay grids, representative election, batched
+    routes, and attribution CSR for every level."""
+    rng = np.random.default_rng(seed)
+    n = g.n
+    part = build_partition(n, k=k, a=a, cell_max=cell_max)
+    K = part.k
+    rep_counts = np.zeros(n, np.int64)
+    levels: list[LevelPlan] = []
+
+    # ---------------- finest level: induced cell subgraphs ----------------
+    cell_of_node = part.cell_of(g.coords, K)
+    present_cells = np.unique(cell_of_node)
+    subgraphs, sub_ids = [], []
+    for c in present_cells:
+        sg, ids = induced_subgraph(g, np.where(cell_of_node == c)[0])
+        subgraphs.append(sg)
+        sub_ids.append(ids)
+    disconnected = sum(0 if sg.is_connected() else 1 for sg in subgraphs)
+    neighbors, degrees, n_nodes, mask = batched_graphs(subgraphs)
+    B, C = mask.shape
+    slot_node = np.full((B, C), -1, np.int32)
+    for b, ids in enumerate(sub_ids):
+        slot_node[b, : len(ids)] = ids
+    # partner in each directed slot, as a global node id
+    nbr_safe = np.clip(neighbors, 0, None)
+    partner = np.where(
+        neighbors >= 0, np.take_along_axis(
+            np.broadcast_to(slot_node[:, :, None], neighbors.shape),
+            nbr_safe, axis=1,
+        ), -1,
+    ).astype(np.int32)
+
+    # elect finest-cell representatives + Alg.1 line-16 reweighting factor
+    centers = part.cell_center(K, present_cells)
+    rep_slot = np.zeros(B, np.int32)
+    for b, ids in enumerate(sub_ids):
+        rep_slot[b] = _elect(rng, rep_mode, len(ids), g.coords[ids], centers[b])
+    rep_node = slot_node[np.arange(B), rep_slot].astype(np.int64)
+    line16 = np.ones(B, np.float32)
+    if K >= 2:
+        parents = part.parent_cell(K, present_cells)
+        sizes = n_nodes.astype(np.float64)
+        for p in np.unique(parents):
+            sel = parents == p
+            line16[sel] = (
+                sizes[sel] * int(sel.sum()) / sizes[sel].sum()
+            ).astype(np.float32)
+
+    base_kwargs = dict(
+        level=K, kind="cells", neighbors=neighbors, degrees=degrees,
+        n_nodes=n_nodes, node_mask=mask,
+        edge_hops=np.ones(neighbors.shape, np.int32), slot_node=slot_node,
+        max_hops=1, partner_node=partner,
+        edge_b=None, edge_i=None, edge_si=None, edge_j=None, edge_sj=None,
+        inc_node=None, inc_edge=None, inc_count=None, routes=None,
+    )
+
+    if K == 1:
+        # degenerate single-level run: no promotion, but the per-cell
+        # election still happens (and is counted) as in Alg. 1
+        rep_counts[rep_node] += 1
+        levels.append(LevelPlan(
+            **base_kwargs, rep_slot=None, rep_node=None, line16=None,
+            next_graph=None, next_slot=None,
+        ))
+        final_graph = np.zeros(n, np.int32)
+        final_slot = np.zeros(n, np.int32)
+        for b, ids in enumerate(sub_ids):
+            final_graph[ids] = b
+            final_slot[ids] = np.arange(len(ids))
+        return HierarchyPlan(
+            graph=g, partition=part, levels=tuple(levels),
+            rep_counts=rep_counts, disconnected_cells=disconnected,
+            final_graph=final_graph, final_slot=final_slot,
+            disseminate=False, seed=seed, rep_mode=rep_mode,
+        )
+
+    rep_counts[rep_node] += 1
+    cur_cells, cur_level = present_cells, K
+    pending_base = base_kwargs  # promotion targets filled once grouped
+
+    # ---------------- overlay levels k-1 .. 1 ----------------
+    while cur_level > 1:
+        j = cur_level - 1
+        parents = part.parent_cell(cur_level, cur_cells)
+        all_edges = part.child_grid_edges(j)
+        order = np.argsort(parents, kind="stable")
+        uniq_parents, starts = np.unique(parents[order], return_index=True)
+        groups = np.split(order, starts[1:])
+
+        # promotion mapping for the previous level
+        next_graph = np.zeros(len(cur_cells), np.int32)
+        next_slot = np.zeros(len(cur_cells), np.int32)
+        for b, grp in enumerate(groups):
+            next_graph[grp] = b
+            next_slot[grp] = np.arange(len(grp))
+        if pending_base is not None:
+            levels.append(LevelPlan(
+                **pending_base, rep_slot=rep_slot, rep_node=rep_node,
+                line16=line16, next_graph=next_graph, next_slot=next_slot,
+            ))
+            pending_base = None
+        else:
+            prev = levels[-1]
+            levels[-1] = dataclasses.replace(
+                prev, rep_slot=rep_slot, rep_node=rep_node,
+                line16=np.ones(prev.num_graphs, np.float32),
+                next_graph=next_graph, next_slot=next_slot,
+            )
+
+        # per-parent overlay grids; route ALL edges of the level at once
+        group_edges, group_sizes = [], []
+        for grp in groups:
+            cells_here = cur_cells[grp]
+            local = {int(c): i for i, c in enumerate(cells_here)}
+            edges = [
+                (local[int(u)], local[int(v)])
+                for u, v in all_edges
+                if int(u) in local and int(v) in local
+            ]
+            edges = _connect_components(edges, g.coords[rep_node[grp]], len(grp))
+            group_edges.append(edges)
+            group_sizes.append(len(grp))
+        flat_pairs = np.concatenate([
+            np.stack([
+                rep_node[grp[[u for u, _ in edges]]],
+                rep_node[grp[[v for _, v in edges]]],
+            ], axis=1) if edges else np.zeros((0, 2), np.int64)
+            for grp, edges in zip(groups, group_edges)
+        ]) if groups else np.zeros((0, 2), np.int64)
+        routes = batched_routes_to_nodes(g, flat_pairs)
+        hops_all = np.maximum(1, routes.hops)
+        level_max_hops = int(hops_all.max()) if len(hops_all) else 1
+
+        overlay_graphs = []
+        e0 = 0
+        edge_b, edge_i, edge_si, edge_j, edge_sj = [], [], [], [], []
+        for b, (grp, edges) in enumerate(zip(groups, group_edges)):
+            m = len(edges)
+            og = _OverlayGraph(
+                len(grp), np.asarray(edges, np.int64).reshape(-1, 2),
+                hops_all[e0 : e0 + m],
+            )
+            overlay_graphs.append(og)
+            for e in range(m):
+                u, v = edges[e]
+                edge_b.append(b)
+                edge_i.append(u)
+                edge_si.append(og.slot_i[e])
+                edge_j.append(v)
+                edge_sj.append(og.slot_j[e])
+            e0 += m
+
+        neighbors, degrees, n_nodes, mask = batched_graphs(overlay_graphs)
+        Bg, Cg = mask.shape
+        edge_hops = np.ones((Bg, Cg, neighbors.shape[2]), np.int32)
+        slot_node = np.full((Bg, Cg), -1, np.int32)
+        for b, (og, grp) in enumerate(zip(overlay_graphs, groups)):
+            edge_hops[b, : og.n, : og.max_deg] = og.edge_hops
+            slot_node[b, : og.n] = rep_node[grp]
+        inc_node, inc_edge, inc_count = _route_incidence(routes)
+
+        overlay_kwargs = dict(
+            level=j, kind="overlay", neighbors=neighbors, degrees=degrees,
+            n_nodes=n_nodes, node_mask=mask, edge_hops=edge_hops,
+            slot_node=slot_node, max_hops=level_max_hops, partner_node=None,
+            edge_b=np.asarray(edge_b, np.int32),
+            edge_i=np.asarray(edge_i, np.int32),
+            edge_si=np.asarray(edge_si, np.int32),
+            edge_j=np.asarray(edge_j, np.int32),
+            edge_sj=np.asarray(edge_sj, np.int32),
+            inc_node=inc_node, inc_edge=inc_edge, inc_count=inc_count,
+            routes=routes,
+        )
+
+        if j == 1:
+            levels.append(LevelPlan(
+                **overlay_kwargs, rep_slot=None, rep_node=None, line16=None,
+                next_graph=None, next_slot=None,
+            ))
+            break
+
+        # elect a level-j representative per grid (promotion filled on the
+        # next iteration, once the grouping at level j-1 is known)
+        centers = part.cell_center(j, uniq_parents)
+        rep_slot = np.zeros(Bg, np.int32)
+        for b, grp in enumerate(groups):
+            rep_slot[b] = _elect(
+                rng, rep_mode, len(grp), g.coords[rep_node[grp]], centers[b]
+            )
+        new_rep_node = slot_node[np.arange(Bg), rep_slot].astype(np.int64)
+        rep_counts[new_rep_node] += 1
+        levels.append(LevelPlan(
+            **overlay_kwargs, rep_slot=rep_slot, rep_node=new_rep_node,
+            line16=np.ones(Bg, np.float32), next_graph=None, next_slot=None,
+        ))
+        rep_node = new_rep_node
+        cur_cells, cur_level = uniq_parents, j
+
+    # dissemination: every node reads its level-2 cell's slot in the
+    # final (level-1) grid, which is a single graph
+    final_lp = levels[-1]
+    lvl2 = part.cell_of(g.coords, 2)
+    slot_of_cell = np.full(part.num_cells(2), -1, np.int32)
+    # final level slots hold reps of level-2 cells, ordered like cur_cells
+    for p in range(int(final_lp.n_nodes[0])):
+        slot_of_cell[int(cur_cells[p])] = p
+    final_graph = np.zeros(n, np.int32)
+    final_slot = slot_of_cell[lvl2]
+    assert (final_slot >= 0).all(), "every node's level-2 cell must be present"
+    return HierarchyPlan(
+        graph=g, partition=part, levels=tuple(levels),
+        rep_counts=rep_counts, disconnected_cells=disconnected,
+        final_graph=final_graph, final_slot=final_slot.astype(np.int32),
+        disseminate=True, seed=seed, rep_mode=rep_mode,
+    )

@@ -6,6 +6,17 @@ target than all of its neighbors is the final recipient.  For RGGs with
 the connectivity radius this succeeds w.h.p.; as an engineering fallback
 (finite n), a stuck route that has not reached the intended node is
 completed with a BFS shortest path and flagged.
+
+Two router implementations share the same semantics:
+
+* scalar (`greedy_route` / `route_to_node`) — one walk at a time, the
+  reference implementation;
+* batched (`batched_greedy_routes` / `batched_routes_to_nodes`) —
+  vectorized frontier stepping over E routes at once (all overlay edges
+  of a hierarchy level in one call), with a batched level-synchronous
+  BFS fallback that reproduces the scalar FIFO BFS hop-for-hop.  The
+  batched form returns padded `(E, L+1)` path arrays, the format the
+  plan/execute simulation core (`core.plan` / `core.engine`) consumes.
 """
 from __future__ import annotations
 
@@ -17,7 +28,16 @@ import numpy as np
 
 from .rgg import Graph
 
-__all__ = ["Route", "greedy_route", "route_to_node", "route_table"]
+__all__ = [
+    "Route",
+    "BatchedRoutes",
+    "greedy_route",
+    "route_to_node",
+    "route_table",
+    "batched_greedy_routes",
+    "batched_routes_to_nodes",
+    "accumulate_route_sends",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -101,3 +121,198 @@ def _bfs_path(g: Graph, src: int, dst: int) -> Optional[np.ndarray]:
 def route_table(g: Graph, pairs: np.ndarray) -> list[Route]:
     """Routes for each (u, v) pair (used to precompute overlay-edge costs)."""
     return [route_to_node(g, int(u), int(v)) for u, v in pairs]
+
+
+# ---------------------------------------------------------------------------
+# Batched routing
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchedRoutes:
+    """E routes as padded arrays: nodes[e, 0] is the source, nodes[e, t]
+    the node after t hops, -1 past the end."""
+
+    nodes: np.ndarray      # (E, Lmax + 1) int32, padded with -1
+    hops: np.ndarray       # (E,) int32
+    greedy_ok: np.ndarray  # (E,) bool — False where the BFS fallback ran
+
+    def __len__(self) -> int:
+        return int(self.nodes.shape[0])
+
+    def route(self, e: int) -> Route:
+        L = int(self.hops[e])
+        return Route(
+            nodes=self.nodes[e, : L + 1].astype(np.int32),
+            hops=L,
+            greedy_ok=bool(self.greedy_ok[e]),
+        )
+
+
+def batched_greedy_routes(
+    g: Graph,
+    srcs: np.ndarray,
+    targets_xy: np.ndarray,
+    max_hops: Optional[int] = None,
+) -> BatchedRoutes:
+    """Greedy-route E sources toward E target locations simultaneously.
+
+    Vectorized frontier stepping: one numpy step advances every live
+    route by one hop.  Semantics (tie-breaking included) match
+    `greedy_route` exactly: rows of `g.neighbors` are compact, so the
+    argmin over the padded row with +inf on padding picks the same slot
+    the scalar argmin over the first `deg` entries does.
+    """
+    E = len(srcs)
+    if max_hops is None:
+        max_hops = 4 * g.n
+    cx, cy = g.coords[:, 0], g.coords[:, 1]
+    cur = np.asarray(srcs, np.int64).copy()
+    targets = np.asarray(targets_xy, np.float64).reshape(E, 2)
+    tx, ty = targets[:, 0], targets[:, 1]
+    d_cur = (cx[cur] - tx) ** 2 + (cy[cur] - ty) ** 2
+    hops = np.zeros(E, np.int64)
+    cols = [cur.astype(np.int32)]
+    # the frontier compresses to still-moving routes each step, so the
+    # per-step cost tracks the number of live walks, not E
+    act = np.where(g.degrees[cur] > 0)[0]
+    for _ in range(max_hops):
+        if len(act) == 0:
+            break
+        nbrs = g.neighbors[cur[act]]                 # (A, D)
+        valid = nbrs >= 0
+        nb = np.where(valid, nbrs, 0)
+        d = (cx[nb] - tx[act, None]) ** 2 + (cy[nb] - ty[act, None]) ** 2
+        d[~valid] = np.inf
+        best = np.argmin(d, axis=1)
+        arange = np.arange(len(act))
+        d_best = d[arange, best]
+        mv = d_best < d_cur[act]
+        if not mv.any():
+            break
+        moved = act[mv]
+        new_cur = nbrs[arange, best][mv].astype(np.int64)
+        cur[moved] = new_cur
+        d_cur[moved] = d_best[mv]
+        hops[moved] += 1
+        col = np.full(E, -1, np.int32)
+        col[moved] = new_cur
+        cols.append(col)
+        act = moved[g.degrees[new_cur] > 0]
+    nodes = np.stack(cols, axis=1) if cols else np.full((E, 1), -1, np.int32)
+    return BatchedRoutes(
+        nodes=nodes, hops=hops.astype(np.int32), greedy_ok=np.ones(E, bool)
+    )
+
+
+def _batched_bfs(g: Graph, srcs: np.ndarray, dsts: np.ndarray) -> list:
+    """Level-synchronous BFS for F (src, dst) pairs at once, reproducing
+    the scalar FIFO BFS (`_bfs_path`) hop-for-hop: each discovered node's
+    parent is its first discoverer in FIFO order, tracked via discovery
+    ranks (rank * max_deg + neighbor-slot is the FIFO key)."""
+    F, n, D = len(srcs), g.n, g.max_deg
+    srcs = np.asarray(srcs, np.int64)
+    dsts = np.asarray(dsts, np.int64)
+    prev = np.full((F, n), -1, np.int64)
+    rank = np.zeros((F, n), np.int64)
+    prev[np.arange(F), srcs] = srcs
+    next_rank = np.ones(F, np.int64)
+    frontier_f, frontier_v = np.arange(F), srcs.copy()
+    found = prev[np.arange(F), dsts] >= 0
+    while len(frontier_f):
+        keep = ~found[frontier_f]
+        ff, fv = frontier_f[keep], frontier_v[keep]
+        if len(ff) == 0:
+            break
+        nbrs = g.neighbors[fv]                       # (M, D)
+        mi, slot = np.nonzero(nbrs >= 0)
+        cf, cu, cv = ff[mi], fv[mi], nbrs[mi, slot].astype(np.int64)
+        undisc = prev[cf, cv] < 0
+        cf, cu, cv, slot = cf[undisc], cu[undisc], cv[undisc], slot[undisc]
+        if len(cf) == 0:
+            break
+        key = rank[cf, cu] * D + slot                # unique FIFO key per (f, u, slot)
+        flat = cf * n + cv
+        order = np.lexsort((key, flat))
+        flat_s = flat[order]
+        first = np.ones(len(flat_s), bool)
+        first[1:] = flat_s[1:] != flat_s[:-1]        # min key per (f, v)
+        sel = order[first]
+        wf, wu, wv, wkey = cf[sel], cu[sel], cv[sel], key[sel]
+        order2 = np.lexsort((wkey, wf))              # FIFO append order per f
+        wf, wu, wv = wf[order2], wu[order2], wv[order2]
+        counts = np.bincount(wf, minlength=F)
+        starts = np.zeros(F, np.int64)
+        np.cumsum(counts[:-1], out=starts[1:])
+        pos = np.arange(len(wf)) - starts[wf]
+        prev[wf, wv] = wu
+        rank[wf, wv] = next_rank[wf] + pos
+        next_rank += counts
+        found = prev[np.arange(F), dsts] >= 0
+        frontier_f, frontier_v = wf, wv
+    paths = []
+    for f in range(F):
+        if prev[f, dsts[f]] < 0:
+            paths.append(None)
+            continue
+        p = [int(dsts[f])]
+        while p[-1] != int(srcs[f]):
+            p.append(int(prev[f, p[-1]]))
+        paths.append(np.asarray(p[::-1], np.int32))
+    return paths
+
+
+def batched_routes_to_nodes(g: Graph, pairs: np.ndarray) -> BatchedRoutes:
+    """Batched `route_to_node` for an (E, 2) array of (src, dst) pairs:
+    vectorized greedy walks for all pairs, then one batched BFS pass over
+    the (rare) pairs whose greedy walk terminated elsewhere."""
+    pairs = np.asarray(pairs, np.int64).reshape(-1, 2)
+    E = len(pairs)
+    srcs, dsts = pairs[:, 0], pairs[:, 1]
+    greedy = batched_greedy_routes(g, srcs, g.coords[dsts])
+    final = greedy.nodes[np.arange(E), greedy.hops]
+    fail = final != dsts
+    if not fail.any():
+        return greedy
+    fidx = np.where(fail)[0]
+    bfs_paths = _batched_bfs(g, srcs[fidx], dsts[fidx])
+    hops = greedy.hops.copy()
+    ok = np.ones(E, bool)
+    ok[fidx] = False
+    repl = {}
+    for f, path in zip(fidx, bfs_paths):
+        if path is None:   # disconnected: keep the greedy attempt (flagged)
+            continue
+        repl[int(f)] = path
+        hops[f] = len(path) - 1
+    Lmax = int(hops.max())
+    nodes = np.full((E, Lmax + 1), -1, np.int32)
+    w = min(greedy.nodes.shape[1], Lmax + 1)
+    nodes[:, :w] = greedy.nodes[:, :w]
+    for f, path in repl.items():
+        nodes[f] = -1
+        nodes[f, : len(path)] = path
+    return BatchedRoutes(nodes=nodes, hops=hops.astype(np.int32), greedy_ok=ok)
+
+
+def accumulate_route_sends(
+    node_sends: np.ndarray, nodes: np.ndarray, hops: np.ndarray,
+    weight: Optional[np.ndarray] = None,
+) -> None:
+    """Scatter-add per-node sends for request+reply traversals of padded
+    routes: nodes[0..L-1] and nodes[L..1] each transmit once per use
+    (`weight[e]` uses of route e, default 1) — the batched counterpart of
+    `Route.send_counts`."""
+    E, W = nodes.shape
+    if E == 0 or W < 2:
+        return
+    col = np.arange(W)[None, :]
+    fwd = col < hops[:, None]            # senders nodes[0..L-1]
+    rep = (col >= 1) & (col <= hops[:, None])  # senders nodes[L..1]
+    if weight is None:
+        np.add.at(node_sends, nodes[fwd], 1)
+        np.add.at(node_sends, nodes[rep], 1)
+    else:
+        wmat = np.broadcast_to(weight[:, None], (E, W))
+        np.add.at(node_sends, nodes[fwd], wmat[fwd])
+        np.add.at(node_sends, nodes[rep], wmat[rep])

@@ -1,8 +1,9 @@
 """Synchronous multiscale gossip — the TPU-native production fast path.
 
-The asynchronous single-pair simulation (`multiscale.py`) is faithful to
-the paper but hostile to the MXU.  Here each level's gossip is executed
-as synchronous rounds of doubly-stochastic mixing,
+The asynchronous single-pair simulation (`multiscale.py` / the
+plan-execute engine) is faithful to the paper but hostile to the MXU.
+Here each level's gossip is executed as synchronous rounds of
+doubly-stochastic mixing,
 
     x_cells <- W_cells^R @ x_cells      (all cells batched),
 
@@ -10,6 +11,10 @@ via the `cell_mixing` Pallas kernel (DESIGN.md §3).  Expected-value
 equivalence with asynchronous pairwise gossip is standard (Boyd et al.);
 message accounting per synchronous round is 2 transmissions per base
 edge (or 2*hops per overlay edge).
+
+Topology, routing, and promotion structure all come from the shared
+`core.plan.HierarchyPlan` (rep_mode="first": deterministic election),
+so this path and the asynchronous engine execute the same hierarchy.
 
 Node values may be d-dimensional — this is the entry point used by
 `repro.dist` to prototype gradient-vector averaging at network scale.
@@ -21,11 +26,8 @@ from typing import Optional
 
 import numpy as np
 
-from .gossip import batched_graphs
-from .multiscale import _OverlayGraph, _connect_components  # shared topology logic
-from .partition import build_partition
-from .rgg import Graph, induced_subgraph
-from .routing import route_to_node
+from .plan import HierarchyPlan, build_plan
+from .rgg import Graph
 
 __all__ = ["SyncMultiscaleResult", "synchronous_multiscale"]
 
@@ -66,6 +68,15 @@ def _mix_until(w, x, mask, counts, eps, max_rounds, chunk, kernel_kwargs):
     return cur, rounds
 
 
+def _level_exchange_cost(lp) -> int:
+    """Single-hop transmissions per synchronous round at this level:
+    2 per base edge, 2*hops per overlay edge."""
+    if lp.kind == "cells":
+        return int(lp.degrees.sum())  # = 2 * #edges
+    hops = lp.edge_hops[lp.edge_b, lp.edge_i, lp.edge_si]
+    return int(2 * hops.sum())
+
+
 def synchronous_multiscale(
     g: Graph,
     x0: np.ndarray,
@@ -78,6 +89,7 @@ def synchronous_multiscale(
     max_rounds: int = 4096,
     use_pallas: bool = False,
     interpret: bool = False,
+    plan: Optional[HierarchyPlan] = None,
 ) -> SyncMultiscaleResult:
     """Weighted (exact-mass) multiscale averaging with synchronous mixing.
 
@@ -89,104 +101,40 @@ def synchronous_multiscale(
     if x0.ndim == 1:
         x0 = x0[:, None]
     n, d = x0.shape
-    part = build_partition(n, k=k, a=a, cell_max=cell_max)
-    K = part.k
+    if plan is None:
+        plan = build_plan(g, k=k, a=a, cell_max=cell_max, rep_mode="first")
     kernel_kwargs = dict(use_pallas=use_pallas, interpret=interpret)
     messages = 0
     rounds_log = []
 
-    # ---- finest level ----
-    cell_of_node = part.cell_of(g.coords, K)
-    present = np.unique(cell_of_node)
-    subgraphs, sub_ids = [], []
-    for c in present:
-        sg, ids = induced_subgraph(g, np.where(cell_of_node == c)[0])
-        subgraphs.append(sg)
-        sub_ids.append(ids)
-    neighbors, degrees, n_nodes, mask = batched_graphs(subgraphs)
-    w = mixing_matrix(neighbors, degrees, n_nodes)
-    B, C = mask.shape
-    # channels: [w*x (d), w] for exact-mass fusion
-    xb = np.zeros((B, C, d + 1), np.float32)
-    for b, ids in enumerate(sub_ids):
-        xb[b, : len(ids), :d] = x0[ids]
-        xb[b, : len(ids), d] = 1.0
-    edges_per_graph = np.array([sg.num_edges for sg in subgraphs])
-    xb, rounds = _mix_until(w, xb, mask, n_nodes, eps, max_rounds, chunk, kernel_kwargs)
-    messages += int(2 * edges_per_graph.sum() * rounds)
-    rounds_log.append((K, rounds))
-
-    # representatives: first node of each cell (synchronous variant uses
-    # deterministic election); promote total cell mass
-    rep_node = np.array([ids[0] for ids in sub_ids])
-    rep_val = np.stack(
-        [xb[b, 0] * len(sub_ids[b]) for b in range(B)]
-    )  # (B, d+1): (sum wx, sum w)
-
-    cur_cells, cur_level = present, K
-    while cur_level > 1:
-        j = cur_level - 1
-        parents = part.parent_cell(cur_level, cur_cells)
-        all_edges = part.child_grid_edges(j)
-        order = np.argsort(parents, kind="stable")
-        uniq_parents, starts = np.unique(parents[order], return_index=True)
-        groups = np.split(order, starts[1:])
-        overlay, members, hop_sums = [], [], []
-        for grp in groups:
-            cells_here = cur_cells[grp]
-            local = {int(c): i for i, c in enumerate(cells_here)}
-            edges = [
-                (local[int(u)], local[int(v)])
-                for u, v in all_edges
-                if int(u) in local and int(v) in local
-            ]
-            edges = _connect_components(edges, g.coords[rep_node[grp]], len(grp))
-            hops = [
-                max(1, route_to_node(g, int(rep_node[grp[u]]), int(rep_node[grp[v]])).hops)
-                for u, v in edges
-            ]
-            overlay.append(
-                _OverlayGraph(
-                    len(grp),
-                    np.asarray(edges, np.int64).reshape(-1, 2),
-                    np.asarray(hops, np.int64),
-                )
-            )
-            members.append(grp)
-            hop_sums.append(sum(hops))
-        neighbors, degrees, n_nodes, mask = batched_graphs(overlay)
-        w = mixing_matrix(neighbors, degrees, n_nodes)
-        Bg, Cg = mask.shape
-        xb = np.zeros((Bg, Cg, d + 1), np.float32)
-        for b, grp in enumerate(members):
-            xb[b, : len(grp)] = rep_val[grp]
+    xb = None
+    for li, lp in enumerate(plan.levels):
+        B, C = lp.node_mask.shape
+        if lp.kind == "cells":
+            # channels: [w*x (d), w] for exact-mass fusion
+            xb = np.zeros((B, C, d + 1), np.float32)
+            live = lp.node_mask
+            xb[..., :d][live] = x0[lp.slot_node[live]]
+            xb[..., d][live] = 1.0
+        w = mixing_matrix(lp.neighbors, lp.degrees, lp.n_nodes)
         xb, rounds = _mix_until(
-            w, xb, mask, n_nodes, eps, max_rounds, chunk, kernel_kwargs
+            w, xb, lp.node_mask, lp.n_nodes, eps, max_rounds, chunk,
+            kernel_kwargs,
         )
-        messages += int(2 * np.asarray(hop_sums).sum() * rounds)
-        rounds_log.append((j, rounds))
-        if j == 1:
-            final_cells, final_vals = cur_cells, xb[0, : len(members[0])]
-            final_members = members[0]
-            break
-        rep_node = np.array([int(rep_node[grp[0]]) for grp in members])
-        rep_val = np.stack(
-            [xb[b, 0] * len(members[b]) for b in range(len(members))]
-        )
-        cur_cells, cur_level = uniq_parents, j
+        messages += _level_exchange_cost(lp) * rounds
+        rounds_log.append((lp.level, rounds))
+        if lp.rep_slot is not None:
+            # promote the representative's total cell mass to the parent grid
+            rep = xb[np.arange(B), lp.rep_slot]            # (B, d+1)
+            rep = rep * lp.n_nodes[:, None].astype(np.float32)
+            B2, C2 = plan.levels[li + 1].node_mask.shape
+            nxt = np.zeros((B2, C2, d + 1), np.float32)
+            nxt[lp.next_graph, lp.next_slot] = rep
+            xb = nxt
 
-    # dissemination
-    x_final = np.zeros((n, d), np.float32)
-    if K == 1:
-        for b, ids in enumerate(sub_ids):
-            est = xb[b, : len(ids), :d] / np.maximum(xb[b, : len(ids), d:], 1e-30)
-            x_final[ids] = est
-    else:
-        lvl2 = part.cell_of(g.coords, 2)
-        for pos, grp_idx in enumerate(final_members):
-            c = int(final_cells[grp_idx])
-            est = final_vals[pos, :d] / max(float(final_vals[pos, d]), 1e-30)
-            x_final[lvl2 == c] = est
+    est = xb[..., :d] / np.maximum(xb[..., d:], 1e-30)
+    x_final = est[plan.final_graph, plan.final_slot]
+    if plan.disseminate:
         messages += n
     return SyncMultiscaleResult(
         x_final=x_final, messages=messages, rounds_per_level=rounds_log

@@ -5,8 +5,15 @@ Two jobs:
 1. `collective_bytes(hlo_text, pod_size)` — sum result-shape bytes of
    every all-gather / all-reduce / reduce-scatter / all-to-all /
    collective-permute in a compiled module, classified intra- vs
-   cross-pod from replica_groups / source_target_pairs (device order
-   follows the (pod, data, model) mesh: pod = id // pod_size).
+   cross-pod.  Partition ids in replica_groups / source_target_pairs
+   index the executable's DEVICE ASSIGNMENT, not raw device ids, and
+   XLA frequently emits the iota form `[G,S]<=[dims...]T(perm)` whose
+   transpose remaps ids (reshape-of-the-replica-axis strategies do this
+   systematically) — so the classifier (a) expands the iota form
+   exactly, transpose included, and (b) accepts an explicit
+   `pod_of` map built from the mesh device assignment
+   (`device_pod_map`), falling back to the `id // pod_size` heuristic
+   only when no assignment is provided.
 
 2. Scan-body undercounting fix: XLA's cost_analysis counts a while-loop
    body ONCE regardless of trip count, so a full-depth scan-over-layers
@@ -25,9 +32,15 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Optional
+from typing import Optional, Sequence
 
-__all__ = ["CollectiveStats", "collective_bytes", "secant_totals", "DTYPE_BYTES"]
+__all__ = [
+    "CollectiveStats",
+    "collective_bytes",
+    "device_pod_map",
+    "secant_totals",
+    "DTYPE_BYTES",
+]
 
 DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
@@ -42,7 +55,10 @@ _COLLECTIVES = (
 _SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([\d,]*)\]")
 # nested-brace attributes: capture through the LAST inner close-brace
 _GROUPS_RE = re.compile(r"replica_groups=\{(.*?\})\}")
-_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\]")
+# iota form, with optional transpose: [G,S]<=[d0,d1,...]T(p0,p1,...)
+_GROUPS_IOTA_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\](?:T\(([\d,]+)\))?"
+)
 _PAIRS_RE = re.compile(r"source_target_pairs=\{(.*?\})\}")
 
 
@@ -62,14 +78,37 @@ def _shape_bytes(text: str) -> int:
 def _parse_groups(line: str) -> Optional[list[list[int]]]:
     m = _GROUPS_IOTA_RE.search(line)
     if m:
-        # iota format [G,S]<=[dims...] — groups of S consecutive-ish ids;
-        # reconstruct the id list
+        # iota format [G,S]<=[dims...]T(perm): the id list is
+        # iota(prod(dims)).reshape(dims).transpose(perm).flatten(),
+        # then split into G groups of S.  Ignoring the transpose is how
+        # reshape-remapped hierarchical fusions get misclassified as
+        # intra-pod (groups look like consecutive-id runs when they are
+        # actually strided across the assignment).
         g, s = int(m.group(1)), int(m.group(2))
         dims = [int(x) for x in m.group(3).split(",")]
         total = 1
         for d in dims:
             total *= d
         ids = list(range(total))
+        if m.group(4):
+            perm = [int(x) for x in m.group(4).split(",")]
+            # flatten(transpose(reshape(iota, dims), perm)) without numpy
+            strides = [0] * len(dims)
+            acc = 1
+            for ax in range(len(dims) - 1, -1, -1):
+                strides[ax] = acc
+                acc *= dims[ax]
+            t_dims = [dims[p] for p in perm]
+            t_strides = [strides[p] for p in perm]
+            ids = []
+            idx = [0] * len(t_dims)
+            for _ in range(total):
+                ids.append(sum(i * st for i, st in zip(idx, t_strides)))
+                for ax in range(len(t_dims) - 1, -1, -1):
+                    idx[ax] += 1
+                    if idx[ax] < t_dims[ax]:
+                        break
+                    idx[ax] = 0
         return [ids[i * s : (i + 1) * s] for i in range(g)]
     m = _GROUPS_RE.search(line)
     if m and m.group(1).strip():
@@ -135,7 +174,53 @@ class CollectiveStats:
         )
 
 
-def collective_bytes(hlo_text: str, pod_size: int = 256) -> CollectiveStats:
+def device_pod_map(devices: Sequence, pod_size: int) -> list[int]:
+    """Pod index per logical partition id, from the mesh device
+    assignment (`list(mesh.devices.flat)` — the order jax hands XLA).
+
+    Uses the accelerator's own pod/slice identity when exposed
+    (`device.slice_index` on multi-slice TPU); otherwise groups physical
+    device ids into pods of `pod_size`.  The point is that partition id
+    p maps to `devices[p]`, which after mesh reshapes/transposes need
+    NOT be the device with id p — the `id // pod_size` heuristic silently
+    assumes it is.
+    """
+    pods = []
+    for i, d in enumerate(devices):
+        s = getattr(d, "slice_index", None)
+        if s is None:
+            s = getattr(d, "id", i) // pod_size
+        pods.append(int(s))
+    return pods
+
+
+def collective_bytes(
+    hlo_text: str,
+    pod_size: int = 256,
+    pod_of: Optional[Sequence[int]] = None,
+) -> CollectiveStats:
+    """Collective op/byte census of an HLO module, classified intra- vs
+    cross-pod.  `pod_of` (from `device_pod_map`) maps partition ids
+    through the real device assignment; without it the classifier falls
+    back to pod = id // pod_size."""
+
+    warned = set()
+
+    def pod(i: int) -> int:
+        if pod_of is not None:
+            if 0 <= i < len(pod_of):
+                return pod_of[i]
+            if i not in warned:  # partial map would silently reintroduce
+                warned.add(i)    # the id//pod_size misclassification
+                import warnings
+
+                warnings.warn(
+                    f"partition id {i} outside pod_of (len {len(pod_of)}); "
+                    "falling back to id // pod_size for it",
+                    stacklevel=2,
+                )
+        return i // pod_size
+
     stats = CollectiveStats()
     for line in hlo_text.splitlines():
         stripped = line.strip()
@@ -154,14 +239,14 @@ def collective_bytes(hlo_text: str, pod_size: int = 256) -> CollectiveStats:
         pairs = _PAIRS_RE.search(stripped)
         if pairs:
             for a, b in re.findall(r"\{(\d+),(\d+)\}", pairs.group(1)):
-                if int(a) // pod_size != int(b) // pod_size:
+                if pod(int(a)) != pod(int(b)):
                     cross = True
                     break
         else:
             groups = _parse_groups(stripped)
             if groups:
                 for grp in groups:
-                    if len({i // pod_size for i in grp}) > 1:
+                    if len({pod(i) for i in grp}) > 1:
                         cross = True
                         break
             else:

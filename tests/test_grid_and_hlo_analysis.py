@@ -5,7 +5,11 @@ import numpy as np
 import pytest
 
 from repro.core import grid_graph, multiscale_gossip, path_averaging
-from repro.launch.hlo_analysis import CollectiveStats, collective_bytes
+from repro.launch.hlo_analysis import (
+    CollectiveStats,
+    collective_bytes,
+    device_pod_map,
+)
 
 
 def test_multiscale_on_grid_topology():
@@ -72,3 +76,43 @@ def test_start_done_counted_once():
     stats = collective_bytes(hlo, pod_size=2)
     assert stats.count == 1
     assert stats.total_bytes == 256 * 4
+
+
+def test_iota_transpose_crosses_pods():
+    # [2,2]<=[2,2]T(1,0): iota [[0,1],[2,3]] transposed -> [0,2,1,3],
+    # groups {0,2},{1,3} — every group crosses the 2-device pods.  The
+    # old parser dropped the transpose and read consecutive {0,1},{2,3}
+    # (intra-pod), the exact bug that zeroed cross-pod bytes on the
+    # 32-replica bench.
+    hlo = "%ar = f32[64]{0} all-reduce(%x), replica_groups=[2,2]<=[2,2]T(1,0), to_apply=%add"
+    stats = collective_bytes(hlo, pod_size=2)
+    assert stats.cross_pod_bytes == 64 * 4
+    # without the transpose the same shape really is intra-pod
+    hlo_plain = "%ar = f32[64]{0} all-reduce(%x), replica_groups=[2,2]<=[2,2], to_apply=%add"
+    assert collective_bytes(hlo_plain, pod_size=2).cross_pod_bytes == 0
+
+
+def test_device_pod_map_overrides_id_heuristic():
+    class Dev:
+        def __init__(self, id):
+            self.id = id
+
+    # assignment order permutes device ids: partition 1 is device 2
+    devices = [Dev(0), Dev(2), Dev(1), Dev(3)]
+    pod_of = device_pod_map(devices, pod_size=2)
+    assert pod_of == [0, 1, 0, 1]
+    hlo = "%ar = f32[8]{0} all-reduce(%x), replica_groups={{0,1},{2,3}}, to_apply=%add"
+    # heuristic: groups {0,1},{2,3} look intra-pod; the assignment says
+    # partition 1 lives in pod 1 => both groups cross
+    assert collective_bytes(hlo, pod_size=2).cross_pod_bytes == 0
+    assert collective_bytes(hlo, pod_size=2, pod_of=pod_of).cross_pod_bytes == 8 * 4
+
+
+def test_device_pod_map_prefers_slice_index():
+    class Dev:
+        def __init__(self, id, slice_index):
+            self.id = id
+            self.slice_index = slice_index
+
+    devices = [Dev(0, 1), Dev(1, 0)]
+    assert device_pod_map(devices, pod_size=64) == [1, 0]

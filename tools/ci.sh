@@ -1,8 +1,12 @@
 #!/usr/bin/env bash
 # CI entry point: tier-1 test suite + a fast benchmark smoke.
 #
-#   tools/ci.sh            # tier-1 + fig2 smoke
-#   tools/ci.sh --no-bench # tests only
+#   tools/ci.sh                     # tier-1 + fig2 smoke
+#   tools/ci.sh --no-bench          # tests only
+#   REPRO_BENCH_SMOKE=1 tools/ci.sh # + fig3 device-resident smoke
+#                                   #   (n=500, trials=1, both engine
+#                                   #   backends — guards the plan/execute
+#                                   #   hot path against regressions)
 #
 # Works offline: hypothesis is optional (property tests skip cleanly,
 # see tests/hypothesis_compat.py).
@@ -17,6 +21,16 @@ python -m pytest -x -q
 if [[ "${1:-}" != "--no-bench" ]]; then
     echo "== benchmark smoke (fig2) =="
     python -m benchmarks.run --only fig2
+fi
+
+if [[ "${REPRO_BENCH_SMOKE:-0}" == "1" ]]; then
+    # scratch artifact name: the smoke must not clobber the full-run artifact
+    echo "== benchmark smoke (fig3 n=500 trials=1, backend=lax) =="
+    python -m benchmarks.fig3_vs_path_averaging --sizes 500 --trials 1 \
+        --backend lax --artifact fig3_smoke
+    echo "== benchmark smoke (fig3 n=500 trials=1, backend=pallas) =="
+    python -m benchmarks.fig3_vs_path_averaging --sizes 500 --trials 1 \
+        --backend pallas --artifact fig3_smoke
 fi
 
 echo "CI OK"
