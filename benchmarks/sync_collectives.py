@@ -12,6 +12,21 @@ share.  Expected, mirroring the paper:
   * multiscale: permutes mostly INSIDE cells; only representative
     promotion crosses pods — the O(n^(1/3))-hop analogue.
 
+Strategies lower through the plan/execute split (`build_sync_plan` +
+`execute_sync`), including error-feedback-compressed and rotated
+(randomized-cell) gossip variants.  The simulation exchanges dense f32
+tensors; `total_bytes`/`by_kind` report the lowering as-is, which for
+compressed/rotated variants includes compression-COMPUTE collectives
+(the emulated top-k sort all-gathers rows; the rotation permutation
+lowers as gathers) on top of the mixing payload.  The `wire_bytes`
+column models what a packed wire format would actually carry: the base
+strategy's mixing collective bytes x `compression.wire_fraction` (topk
+ships (value, index) pairs, so fraction 0.125 keeps wire at 0.25x
+dense; int8 is 1 byte per entry = 0.25x; rotation relabels neighbors
+without changing traffic).  `modeled_wire_bytes` is the
+device-independent `plan_wire_bytes` accounting used by the train-step
+metric.
+
 Cross-pod classification goes through `device_pod_map`: partition ids in
 lowered replica_groups index the mesh device assignment (reshapes of the
 replica axis remap them), so the raw `id // pod_size` heuristic is only
@@ -37,7 +52,10 @@ def run(wallclock: bool = False) -> list[str]:
     import jax.numpy as jnp
     from jax.sharding import NamedSharding, PartitionSpec as P
 
-    from repro.dist import SyncConfig, suggest_levels, sync_gradients
+    from repro.dist import (
+        CompressionConfig, SyncConfig, build_sync_plan, execute_sync,
+        plan_wire_bytes, suggest_levels, wire_fraction,
+    )
     from repro.launch.hlo_analysis import collective_bytes, device_pod_map
     from repro.launch.mesh import set_mesh
     from .common import csv_line, load_artifact, save_artifact
@@ -54,7 +72,11 @@ def run(wallclock: bool = False) -> list[str]:
     )
     sh = {k: NamedSharding(mesh, P("replica", *([None] * (len(a.shape) - 1))))
           for k, a in grads_abs.items()}
+    step_abs = jax.ShapeDtypeStruct((), jnp.int32)
+    step_sh = NamedSharding(mesh, P())
     levels = suggest_levels(R)           # (4, 2, 4) for 32
+    topk = CompressionConfig("topk", topk_fraction=0.125)  # 2x/entry -> 0.25x wire
+    int8 = CompressionConfig("int8")
     strategies = {
         "allreduce": SyncConfig("allreduce"),
         "hierarchical": SyncConfig("hierarchical", levels=levels),
@@ -62,6 +84,13 @@ def run(wallclock: bool = False) -> list[str]:
         "multiscale": SyncConfig("multiscale", levels=levels),
         "multiscale_exact": SyncConfig("multiscale", levels=levels,
                                        exact_fusion=True),
+        "ring_int8": SyncConfig("ring", rounds=(2 * R,), compression=int8),
+        "multiscale_topk": SyncConfig("multiscale", levels=levels,
+                                      compression=topk),
+        "multiscale_int8": SyncConfig("multiscale", levels=levels,
+                                      compression=int8),
+        "multiscale_rotated": SyncConfig("multiscale", levels=levels,
+                                         rotation_period=4),
     }
     # 16 replicas per "pod"; partition ids map through the assignment
     pod_of = device_pod_map(list(mesh.devices.flat), pod_size=16)
@@ -84,32 +113,65 @@ def run(wallclock: bool = False) -> list[str]:
             for k, a in grads_abs.items()
         }
     rows, lines = {}, []
+    # dense-base mixing collectives per (strategy, levels, rounds,
+    # exact_fusion): compressed/rotated variants inherit their base's
+    # payload traffic for the wire_bytes model (iteration order puts
+    # every base before its variants)
+    base_bytes: dict = {}
     for name, cfg_s in strategies.items():
+        plan = build_sync_plan(cfg_s, R)
+        compressed = cfg_s.compression.scheme != "none"
         with set_mesh(mesh):
-            compiled = (
-                jax.jit(
-                    lambda g: sync_gradients(g, cfg_s, R),
-                    in_shardings=(sh,), out_shardings=sh,
-                )
-                .lower(grads_abs)
-                .compile()
-            )
+            if compressed:  # residuals ride along as a second input pytree
+                fn = lambda g, r, s, p=plan: execute_sync(p, g, r, s)
+                jitted = jax.jit(fn, in_shardings=(sh, sh, step_sh),
+                                 out_shardings=(sh, sh))
+                abs_args = (grads_abs, grads_abs, step_abs)
+            else:
+                fn = lambda g, s, p=plan: execute_sync(p, g, None, s)[0]
+                jitted = jax.jit(fn, in_shardings=(sh, step_sh),
+                                 out_shardings=sh)
+                abs_args = (grads_abs, step_abs)
+            compiled = jitted.lower(*abs_args).compile()
         stats = collective_bytes(compiled.as_text(), pod_size=16, pod_of=pod_of)
+        frac = wire_fraction(cfg_s.compression)
+        key = (cfg_s.strategy, plan.levels, plan.rounds, plan.exact_fusion)
+        if not compressed and not plan.rotated:
+            base_bytes.setdefault(key, stats.total_bytes)
+        # variants must follow their dense base in `strategies`: falling back
+        # to the variant's own lowering would count compression-compute
+        # collectives (top-k sort gathers, rotation gathers) as wire payload
+        assert key in base_bytes, (
+            f"{name}: dense base for {key} must be listed before its variants"
+        )
+        mixing_bytes = base_bytes[key]
         rows[name] = stats.asdict()
         rows[name]["bytes_per_replica_payload"] = float(per_replica_bytes)
+        rows[name]["wire_fraction"] = frac
+        rows[name]["wire_bytes"] = float(mixing_bytes) * frac
+        rows[name]["modeled_wire_bytes"] = plan_wire_bytes(plan, grads_abs)
+        rows[name]["compression"] = cfg_s.compression.scheme
+        rows[name]["rotation_period"] = cfg_s.rotation_period
         lines.append(csv_line(
             f"sync/{name}", 0.0,
             f"coll_bytes={stats.total_bytes} "
             f"cross_pod={stats.cross_pod_bytes} "
             f"ops={stats.count} "
-            f"xpod_frac={stats.cross_pod_bytes/max(stats.total_bytes,1):.2f}",
+            f"xpod_frac={stats.cross_pod_bytes/max(stats.total_bytes,1):.2f} "
+            f"wire_bytes={rows[name]['wire_bytes']:.0f} "
+            f"wire_frac={frac:.3f}",
         ))
         if wallclock and can_time:
-            jax.block_until_ready(compiled(grads))  # warm-up
+            args = (grads, jnp.int32(0))
+            if compressed:
+                res = {k: jax.device_put(np.zeros(a.shape, np.float32), sh[k])
+                       for k, a in grads_abs.items()}
+                args = (grads, res, jnp.int32(0))
+            jax.block_until_ready(compiled(*args))  # warm-up
             reps = 3
             t0 = time.perf_counter()
             for _ in range(reps):
-                jax.block_until_ready(compiled(grads))
+                jax.block_until_ready(compiled(*args))
             ms = (time.perf_counter() - t0) * 1e3 / reps
             rows[name]["wallclock_ms"] = ms
             rows[name]["wallclock_emulated"] = emulated

@@ -2,24 +2,35 @@
 multiscale gossip applied to data-parallel training replicas).
 
 Public surface:
-  SyncConfig / sync_gradients  strategy-dispatched replica-axis mixing
-  suggest_levels               the n^(2/3) recursive-partition rule
-  compression                  error-feedback gradient compression
+  SyncConfig / build_sync_plan  static plan resolution (plan/execute split)
+  SyncPlan / execute_sync       compiled compress->rotate->mix executor
+  sync_gradients                one-shot strategy-dispatched mixing
+  suggest_levels                the n^(2/3) recursive-partition rule
+  rotation_schedule             step-indexed randomized-cell permutations
+  compression                   error-feedback gradient compression
 """
 from .compression import (
     CompressionConfig, compress, decompress, init_residual, wire_fraction,
 )
 from .gossip_sync import STRATEGIES, SyncConfig, sync_gradients
+from .plan import SyncPlan, build_sync_plan, plan_wire_bytes, tree_payload_bytes
+from .gossip_sync import execute_sync
 from .topology import (
     complete_matrix, default_rounds, hierarchy_matrix, is_doubly_stochastic,
-    ring_matrix, suggest_levels,
+    ring_matrix, rotation_schedule, suggest_levels,
 )
 
 __all__ = [
     "SyncConfig",
+    "SyncPlan",
+    "build_sync_plan",
+    "execute_sync",
+    "plan_wire_bytes",
+    "tree_payload_bytes",
     "sync_gradients",
     "STRATEGIES",
     "suggest_levels",
+    "rotation_schedule",
     "ring_matrix",
     "complete_matrix",
     "hierarchy_matrix",

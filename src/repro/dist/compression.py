@@ -67,9 +67,14 @@ def init_residual(grads: Any) -> Any:
 
 def compress(grads: Any, residual: Any, cfg: CompressionConfig) -> tuple[Any, Any]:
     """(payload, new_residual) with payload + new_residual == grads + residual
-    exactly for topk, and payload within the quantization bound for int8.
-    Leaves carry a leading replica axis; compression decisions are made
-    per replica (each replica transmits independently)."""
+    reconstructing the accumulator BITWISE for both schemes — topk entries
+    are exact copies or exact leftovers, and int8's per-entry subtraction
+    acc - dequant is Sterbenz-exact (dequant/2 <= acc <= 2*dequant whenever
+    the quantized level is nonzero; entries that quantize to zero leave the
+    accumulator itself as residual) — so no gradient mass is ever created
+    or destroyed by a sync, only deferred.  Leaves carry a leading replica
+    axis; compression decisions are made per replica (each replica
+    transmits independently)."""
     if cfg.scheme == "none":
         return grads, residual
 

@@ -3,7 +3,16 @@
 The paper's multiscale gossip (Algorithm 1), transplanted from wireless
 sensor networks to decentralized data-parallel training: R parameter
 replicas hold per-replica gradients (leading axis R on every pytree
-leaf) and `sync_gradients` mixes them according to a `SyncConfig`.
+leaf) mixed according to a static `SyncPlan` (`dist/plan.py`).
+
+Plan/execute split (mirror of `core/plan.py` / `core/engine.py`): the
+hierarchy, rounds, rotation schedule, and compression config are
+resolved once by `build_sync_plan(SyncConfig, R)`; the compiled
+`execute_sync(plan, grads, residuals, step)` then threads
+compress -> rotate -> mix -> scatter-back with per-replica
+error-feedback residuals through every strategy, and is the single
+seam future async / shard_map overlap plugs into.  `sync_gradients` is
+the one-shot convenience wrapper (no residual state across calls).
 
 Strategies
 ----------
@@ -34,6 +43,18 @@ Strategies
     mean exactly; with the uniform occupancy this module enforces it
     evaluates as the hierarchical grouped-mean ladder.
 
+Cross-cutting plan features (gossip strategies):
+
+* **rotation** — `rotation_period > 0` cycles a precomputed table of
+  replica permutations by sync step (the paper's randomized cells), so
+  ring neighbors / cell membership change every step.  Conjugating a
+  doubly-stochastic mix by a permutation is still doubly stochastic:
+  the replica mean is untouched and exact_fusion stays exact.
+* **compression** — a non-``none`` `CompressionConfig` mixes the
+  as-transmitted payloads from `dist.compression` (error feedback:
+  unsent mass stays in per-replica residuals and is re-injected next
+  sync), so gossip competes on wire *bytes*, not just message counts.
+
 Every strategy is a pure jittable function of the gradient pytree: on a
 host-replicated array it is plain arithmetic; under a sharded
 ``("replica",)`` mesh the same code lowers to real collectives
@@ -42,84 +63,45 @@ host-replicated array it is plain arithmetic; under a sharded
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 
-from .topology import default_rounds, suggest_levels
+from .compression import compress, decompress, init_residual
+from .plan import STRATEGIES, SyncConfig, SyncPlan, build_sync_plan
 
-__all__ = ["SyncConfig", "sync_gradients", "STRATEGIES"]
+__all__ = [
+    "SyncConfig",
+    "SyncPlan",
+    "build_sync_plan",
+    "execute_sync",
+    "sync_gradients",
+    "STRATEGIES",
+]
 
-STRATEGIES = ("allreduce", "hierarchical", "ring", "multiscale")
 
+def execute_sync(
+    plan: SyncPlan,
+    grads: Any,
+    residuals: Optional[Any] = None,
+    step: Any = 0,
+) -> tuple[Any, Any]:
+    """Run one synchronization under a static plan.
 
-@dataclasses.dataclass(frozen=True)
-class SyncConfig:
-    """Static (hashable) description of one synchronization strategy.
+    grads: pytree with leading replica axis `plan.R` on every leaf.
+    residuals: error-feedback state (same pytree; required state when
+        `plan.compression` is active — pass what the previous call
+        returned, zeros via `compression.init_residual` at step 0).
+        With compression off it is threaded through untouched.
+    step: scalar sync index (traced or concrete) driving the rotation
+        schedule; ignored by static plans.
 
-    levels: branching factors coarsest-first, product == R; () defers to
-        `suggest_levels(R)` at call time (ignored by allreduce/ring).
-    rounds: per-level mixing rounds.  For `ring` a single entry is the
-        number of global ring rounds; for `multiscale` either one entry
-        shared by all levels or one per level; () picks
-        `default_rounds(cell_size)` per level.
-    exact_fusion: multiscale only — mass-weighted exact fusion that
-        preserves the replica mean bitwise at every scale.
+    Returns (mixed_grads, new_residuals).  Jit with `plan` static (it is
+    hashable); the compiled executor serves every step of a run.
     """
-
-    strategy: str = "allreduce"
-    levels: tuple[int, ...] = ()
-    rounds: tuple[int, ...] = ()
-    exact_fusion: bool = False
-
-    def __post_init__(self):
-        if self.strategy not in STRATEGIES:
-            raise ValueError(
-                f"unknown strategy {self.strategy!r}; expected one of {STRATEGIES}"
-            )
-        object.__setattr__(self, "levels", tuple(int(l) for l in self.levels))
-        object.__setattr__(self, "rounds", tuple(int(r) for r in self.rounds))
-        if any(l < 1 for l in self.levels):
-            raise ValueError(f"levels must be positive, got {self.levels}")
-        if any(r < 0 for r in self.rounds):
-            raise ValueError(f"rounds must be >= 0, got {self.rounds}")
-
-    def resolved_levels(self, R: int) -> tuple[int, ...]:
-        levels = self.levels or suggest_levels(R)
-        prod = 1
-        for l in levels:
-            prod *= l
-        if prod != R:
-            raise ValueError(
-                f"levels {levels} factor {prod} replicas but R={R}"
-            )
-        return levels
-
-    def resolved_rounds(self, levels: tuple[int, ...]) -> tuple[int, ...]:
-        if not self.rounds:
-            return tuple(default_rounds(l) for l in levels)
-        if len(self.rounds) == 1:
-            return self.rounds * len(levels)
-        if len(self.rounds) != len(levels):
-            raise ValueError(
-                f"rounds {self.rounds} does not match levels {levels}"
-            )
-        return self.rounds
-
-
-def sync_gradients(grads: Any, cfg: SyncConfig, R: int) -> Any:
-    """Mix a per-replica gradient pytree (leading axis R on every leaf).
-
-    Returns a pytree of the same structure/shapes.  Exact strategies
-    leave every replica holding the global mean; gossip strategies bound
-    the replica disagreement by the configured mixing rounds (the
-    paper's eps) while staying inside the convex hull of the inputs.
-    """
-    if R < 1:
-        raise ValueError(f"R must be >= 1, got {R}")
+    R = plan.R
     leaves = jax.tree.leaves(grads)
     for leaf in leaves:
         if leaf.ndim < 1 or leaf.shape[0] != R:
@@ -128,24 +110,64 @@ def sync_gradients(grads: Any, cfg: SyncConfig, R: int) -> Any:
                 f"got shape {leaf.shape}"
             )
     if R == 1:
-        return grads
+        return grads, residuals
 
-    if cfg.strategy == "allreduce":
-        fn = lambda g: _allreduce(g)
-    elif cfg.strategy == "hierarchical":
-        levels = cfg.resolved_levels(R)
-        fn = lambda g: _hierarchical(g, levels)
-    elif cfg.strategy == "ring":
-        rounds = cfg.rounds[0] if cfg.rounds else 2 * R
-        fn = lambda g: _ring(g, rounds)
+    if plan.compression.scheme != "none":
+        if residuals is None:
+            residuals = init_residual(grads)
+        payload, new_residuals = compress(grads, residuals, plan.compression)
+        payload = decompress(payload, plan.compression)
+    else:
+        payload, new_residuals = grads, residuals
+
+    if plan.strategy == "allreduce":
+        fn = _allreduce
+    elif plan.strategy == "hierarchical":
+        fn = lambda g: _hierarchical(g, plan.levels)
+    elif plan.strategy == "ring":
+        fn = lambda g: _ring(g, plan.rounds[0])
     else:  # multiscale
-        levels = cfg.resolved_levels(R)
-        rounds = cfg.resolved_rounds(levels)
-        fn = lambda g: _multiscale(g, levels, rounds, cfg.exact_fusion)
-    return jax.tree.map(fn, grads)
+        fn = lambda g: _multiscale(
+            g, plan.levels, plan.rounds, plan.exact_fusion
+        )
+    if plan.rotated:
+        fn = _rotate(fn, plan, step)
+    return jax.tree.map(fn, payload), new_residuals
+
+
+def sync_gradients(grads: Any, cfg: SyncConfig, R: int) -> Any:
+    """One-shot mix of a per-replica gradient pytree (leading axis R).
+
+    Convenience wrapper over `build_sync_plan` + `execute_sync` for call
+    sites without persistent state: residuals start at zero and the new
+    residuals are dropped, so error-feedback compression only
+    accumulates across calls when you hold the state yourself (the
+    decentralized train step does).  Returns a pytree of the same
+    structure/shapes.  Exact strategies leave every replica holding the
+    global mean; gossip strategies bound the replica disagreement by
+    the configured mixing rounds (the paper's eps) while staying inside
+    the convex hull of the inputs.
+    """
+    mixed, _ = execute_sync(build_sync_plan(cfg, R), grads)
+    return mixed
 
 
 # ------------------------------ strategies ------------------------------
+
+
+def _rotate(fn, plan: SyncPlan, step) -> Any:
+    """Conjugate a mixing operator by the step's rotation permutation.
+
+    Slot s of the mixed array holds replica perm[s]; the inverse table
+    scatters slot values back to their home replicas, so the wrapped
+    operator acts on a freshly shuffled cell assignment every step while
+    output replica order stays fixed.
+    """
+    perms = jnp.asarray(plan.rotation, jnp.int32)
+    invs = jnp.asarray(plan.rotation_inv, jnp.int32)
+    idx = jnp.mod(jnp.asarray(step, jnp.int32), perms.shape[0])
+    perm, inv = perms[idx], invs[idx]
+    return lambda g: jnp.take(fn(jnp.take(g, perm, axis=0)), inv, axis=0)
 
 
 def _allreduce(g: jax.Array) -> jax.Array:

@@ -27,6 +27,7 @@ __all__ = [
     "hierarchy_matrix",
     "default_rounds",
     "is_doubly_stochastic",
+    "rotation_schedule",
 ]
 
 # Cells of <= _CELL_MAX replicas mix in O(1) rounds; recursion stops here
@@ -112,6 +113,28 @@ def hierarchy_matrix(
         lvl_op = np.kron(np.kron(np.eye(pre), w), np.eye(post))
         op = lvl_op @ op
     return op
+
+
+def rotation_schedule(
+    R: int, period: int, seed: int = 0
+) -> tuple[np.ndarray, np.ndarray]:
+    """The paper's randomized cells (§IV) on the replica set: a table of
+    `period` replica permutations cycled by sync step, so cell membership
+    (and ring neighbors) changes every step and no straggler is pinned to
+    one cell.  Deterministic in (seed, step): step t uses row t % period.
+
+    Returns (perms, invs), both (period, R) int32 with
+    ``invs[t, perms[t, s]] == s`` — mixing runs in permuted order and the
+    inverse scatters values back to their home replicas.
+    """
+    if R < 1:
+        raise ValueError(f"replica count must be >= 1, got {R}")
+    if period < 1:
+        raise ValueError(f"rotation period must be >= 1, got {period}")
+    rng = np.random.default_rng(seed)
+    perms = np.stack([rng.permutation(R) for _ in range(period)]).astype(np.int32)
+    invs = np.argsort(perms, axis=1).astype(np.int32)
+    return perms, invs
 
 
 def default_rounds(cell_size: int) -> int:

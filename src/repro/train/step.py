@@ -6,11 +6,20 @@ gradient all-reduce over (pod, data) is XLA-inserted (baseline sync).
 
 `make_decentralized_step` — the paper's feature: per-consensus-group
 parameter replicas (leading axis R) whose gradients are mixed by a
-`repro.dist.gossip_sync.SyncConfig` strategy instead of an exact global
-all-reduce.  Exact strategies (allreduce / hierarchical) keep replicas
+`repro.dist` strategy instead of an exact global all-reduce.  The
+`SyncConfig` is resolved ONCE into a static `SyncPlan`
+(`dist.build_sync_plan`) when the step is built; every step then runs
+the compiled `dist.execute_sync(plan, grads, residuals, step)` —
+compress (error feedback) -> rotate (randomized cells by step index)
+-> mix.  Exact strategies (allreduce / hierarchical) keep replicas
 bitwise identical; gossip strategies bound the replica disagreement by
-the mixing rounds (the paper's eps) — consensus distance is reported in
-the metrics.
+the mixing rounds (the paper's eps).  Metrics report the consensus
+distance and the modeled per-sync wire bytes
+(`dist.plan_wire_bytes` — payload x transmissions x wire_fraction).
+
+When compression is on, the train state carries a per-replica
+`residuals` pytree (grown by `init_decentralized_state(..., sync=...)`)
+so unsent gradient mass is re-injected next step.
 """
 from __future__ import annotations
 
@@ -21,7 +30,9 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.dist.gossip_sync import SyncConfig, sync_gradients
+from repro.dist import (
+    SyncConfig, build_sync_plan, execute_sync, init_residual, plan_wire_bytes,
+)
 from repro.models import loss_fn
 from repro.models.config import ModelConfig
 from repro.optim.optimizers import (
@@ -42,14 +53,24 @@ def init_train_state(params, optimizer: Optimizer) -> dict:
     }
 
 
-def init_decentralized_state(params_replicated, optimizer: Optimizer) -> dict:
+def init_decentralized_state(
+    params_replicated, optimizer: Optimizer, sync: Optional[SyncConfig] = None
+) -> dict:
     """params_replicated: leading replica axis R on every leaf; the
-    optimizer state is vmapped so its leaves carry R too."""
-    return {
+    optimizer state is vmapped so its leaves carry R too.
+
+    Pass the step's `SyncConfig` to size the state for it: with a
+    non-``none`` compression scheme the state grows a per-replica
+    error-feedback `residuals` pytree (zeros, same structure as params)
+    that `execute_sync` updates every step."""
+    state = {
         "params": params_replicated,
         "opt": jax.vmap(optimizer.init)(params_replicated),
         "step": jnp.zeros((), jnp.int32),
     }
+    if sync is not None and sync.compression.scheme != "none":
+        state["residuals"] = init_residual(params_replicated)
+    return state
 
 
 def make_train_step(
@@ -102,10 +123,23 @@ def make_decentralized_step(
     clip_norm: float = 1.0,
 ) -> Callable:
     """Step over replicated state: every leaf of params/opt carries a
-    leading replica axis R; batch is (R, per_replica, S)."""
+    leading replica axis R; batch is (R, per_replica, S).
+
+    The sync config is resolved to a static `SyncPlan` here, once; the
+    returned step is a pure function of (state, batch) whose `step`
+    counter drives the plan's rotation schedule.  With compression on,
+    `state` must carry the `residuals` pytree from
+    `init_decentralized_state(..., sync=sync)`."""
     R = num_replicas
+    plan = build_sync_plan(sync, R)
+    compressed = plan.compression.scheme != "none"
 
     def step(state, batch):
+        if compressed and "residuals" not in state:
+            raise ValueError(
+                "compressed sync needs error-feedback state: build the train "
+                "state with init_decentralized_state(params, opt, sync=sync)"
+            )
         def total_loss(p):
             # sum of per-replica losses => per-replica grads
             losses = jax.vmap(
@@ -123,18 +157,24 @@ def make_decentralized_step(
                                       jnp.maximum(gnorm, 1e-9)).astype(g.dtype),
             grads,
         )
-        grads = sync_gradients(grads, sync, R)
+        grads, new_residuals = execute_sync(
+            plan, grads, state.get("residuals"), state["step"]
+        )
         lr = lr_fn(state["step"])
         updates, opt = jax.vmap(
             lambda g, o, p: optimizer.update(g, o, p, lr)
         )(grads, state["opt"], state["params"])
         params = apply_updates(state["params"], updates)
         new_state = {"params": params, "opt": opt, "step": state["step"] + 1}
+        if "residuals" in state:
+            new_state["residuals"] = new_residuals
         metrics = {
             "loss": losses.mean(),
             "grad_norm": gnorm,
             "lr": lr,
             "consensus_distance": consensus_distance(params),
+            # static given shapes — folds to a constant under jit
+            "wire_bytes": jnp.float32(plan_wire_bytes(plan, grads)),
         }
         return new_state, metrics
 

@@ -54,6 +54,10 @@ class Trainer:
         self.log_path = log_path
         self.fail_at_step = fail_at_step
         self.metrics_history: list[dict] = []
+        # cumulative modeled wire traffic of decentralized sync (steps that
+        # report `wire_bytes` — see make_decentralized_step); restarts reset
+        # the counter, matching its role as a per-run traffic gauge
+        self.wire_bytes_total = 0.0
         if ckpt_dir and latest_step(ckpt_dir) is not None:
             self.state, step = restore_checkpoint(ckpt_dir, self.state)
             print(f"[trainer] resumed from step {step}")
@@ -86,6 +90,9 @@ class Trainer:
                 **{k: float(np.asarray(v)) for k, v in metrics.items()},
                 "sec_per_step": now - t_last,
             }
+            if "wire_bytes" in rec:
+                self.wire_bytes_total += rec["wire_bytes"]
+                rec["wire_bytes_total"] = self.wire_bytes_total
             t_last = now
             self._log(rec)
         # final checkpoint so a finished run is always resumable

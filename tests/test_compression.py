@@ -69,6 +69,27 @@ def test_error_feedback_converges_mean():
         assert drift <= 12 * scale  # residual stays bounded (EF property)
 
 
+@pytest.mark.parametrize("scheme", ["topk", "int8"])
+def test_error_feedback_conserves_accumulator_bitwise(scheme):
+    """Sent tensor + new residual reconstructs the (gradient + residual)
+    accumulator BITWISE: topk entries are exact copies/leftovers; int8's
+    acc - dequant subtraction is Sterbenz-exact (nonzero quantization
+    levels satisfy dequant/2 <= acc <= 2*dequant; zero levels leave acc
+    itself as residual).  No mass is created or destroyed by a sync."""
+    for seed in range(5):
+        rng = np.random.default_rng(seed)
+        g = _grads(seed=seed)
+        res = jax.tree.map(
+            lambda x: jnp.asarray(
+                rng.normal(size=x.shape) * 0.1, jnp.float32), g,
+        )
+        p, r2 = compress(g, res, CompressionConfig(scheme, topk_fraction=0.25))
+        for k in g:
+            acc = np.asarray(g[k]) + np.asarray(res[k])
+            recon = np.asarray(p[k]) + np.asarray(r2[k])
+            np.testing.assert_array_equal(recon, acc)
+
+
 @given(frac=st.floats(0.05, 0.9), seed=st.integers(0, 50))
 @settings(max_examples=10)
 def test_property_decomposition_exact(frac, seed):

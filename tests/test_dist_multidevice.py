@@ -105,8 +105,28 @@ def test_sync_strategies_execute_with_collectives():
             before = np.abs(np.asarray(g["w"]) - want[None]).max()
             assert spread < 0.5 * before, (strat, spread, before)
         print("STRAT", strat, stats.count, round(float(err), 6))
+
+    # compressed + rotated execute_sync on the same sharded mesh: residual
+    # state and the step index thread through a real collective lowering
+    from repro.dist import (CompressionConfig, build_sync_plan, execute_sync,
+                            init_residual)
+    plan = build_sync_plan(
+        SyncConfig("multiscale", levels=suggest_levels(R),
+                   compression=CompressionConfig("topk", topk_fraction=0.25),
+                   rotation_period=3),
+        R)
+    with set_mesh(mesh):
+        f = jax.jit(lambda x, r, s: execute_sync(plan, x, r, s),
+                    in_shardings=((dict(w=sh), dict(w=sh), None)),
+                    out_shardings=(dict(w=sh), dict(w=sh)))
+        mixed, res = f(g, init_residual(g), jnp.int32(0))
+    assert np.isfinite(np.asarray(mixed["w"])).all()
+    # EF decomposition survives sharding: residual is exactly the unsent mass
+    assert np.abs(np.asarray(res["w"])).max() > 0
+    print("COMPRESSED OK")
     """)
     assert out.count("STRAT") == 4
+    assert "COMPRESSED OK" in out
 
 
 def test_elastic_checkpoint_restore_across_meshes():

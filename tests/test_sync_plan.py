@@ -1,0 +1,113 @@
+"""SyncPlan construction: validation, rotation schedule, wire accounting."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.dist import (
+    CompressionConfig, SyncConfig, build_sync_plan, execute_sync,
+    plan_wire_bytes, rotation_schedule, suggest_levels, tree_payload_bytes,
+    wire_fraction,
+)
+
+
+# --------------------------- config validation ---------------------------
+
+
+def test_rounds_levels_length_mismatch_raises_at_construction():
+    with pytest.raises(ValueError, match="rounds .* entries but levels"):
+        SyncConfig("multiscale", levels=(2, 2, 2), rounds=(1, 2))
+
+
+def test_ring_rejects_per_level_rounds():
+    with pytest.raises(ValueError, match="single global round count"):
+        SyncConfig("ring", rounds=(4, 4))
+
+
+def test_non_product_levels_raise_at_plan_time_with_clear_message():
+    with pytest.raises(ValueError, match="factor 9 replicas but R=8"):
+        build_sync_plan(SyncConfig("multiscale", levels=(3, 3)), 8)
+
+
+def test_negative_rotation_period_rejected():
+    with pytest.raises(ValueError, match="rotation_period"):
+        SyncConfig("multiscale", rotation_period=-1)
+
+
+def test_compression_scheme_string_coerces():
+    cfg = SyncConfig("multiscale", compression="int8")
+    assert cfg.compression == CompressionConfig("int8")
+
+
+# ------------------------------- the plan --------------------------------
+
+
+def test_plan_is_hashable_and_resolved():
+    R = 32
+    plan = build_sync_plan(SyncConfig("multiscale"), R)
+    assert hash(plan) is not None
+    assert plan.levels == suggest_levels(R)
+    assert len(plan.rounds) == len(plan.levels)
+    assert plan.rotation is None
+    # identical configs resolve to equal (jit-cache-friendly) plans
+    assert plan == build_sync_plan(SyncConfig("multiscale"), R)
+
+
+def test_plan_static_under_jit_single_trace():
+    R = 8
+    plan = build_sync_plan(SyncConfig("multiscale", rotation_period=3), R)
+    traces = []
+
+    @jax.jit
+    def f(g, s):
+        traces.append(1)
+        return execute_sync(plan, g, None, s)[0]
+
+    g = {"x": jnp.ones((R, 4))}
+    f(g, 0)
+    f(g, 1)  # step is traced — rotation change must NOT retrigger tracing
+    assert len(traces) == 1
+
+
+def test_rotation_schedule_deterministic_and_inverse():
+    perms, invs = rotation_schedule(16, period=5, seed=7)
+    perms2, invs2 = rotation_schedule(16, period=5, seed=7)
+    np.testing.assert_array_equal(perms, perms2)
+    np.testing.assert_array_equal(invs, invs2)
+    for t in range(5):
+        np.testing.assert_array_equal(invs[t][perms[t]], np.arange(16))
+    # a different seed gives a different schedule
+    assert not np.array_equal(perms, rotation_schedule(16, 5, seed=8)[0])
+
+
+def test_rotation_only_built_for_gossip_strategies():
+    for strat in ("allreduce", "hierarchical"):
+        plan = build_sync_plan(SyncConfig(strat, rotation_period=4), 8)
+        assert plan.rotation is None, strat
+    plan = build_sync_plan(SyncConfig("ring", rotation_period=4), 8)
+    assert plan.rotation is not None and len(plan.rotation) == 4
+
+
+# ---------------------------- wire accounting ----------------------------
+
+
+def test_wire_bytes_scale_with_compression():
+    R = 8
+    g = {"a": jnp.zeros((R, 64)), "b": jnp.zeros((R, 4, 8))}
+    assert tree_payload_bytes(g) == (64 + 32) * 4
+    dense = build_sync_plan(SyncConfig("multiscale"), R)
+    int8 = build_sync_plan(SyncConfig("multiscale", compression="int8"), R)
+    assert plan_wire_bytes(int8, g) == pytest.approx(
+        0.25 * plan_wire_bytes(dense, g)
+    )
+    assert wire_fraction(int8.compression) == 0.25
+
+
+def test_transmissions_ordering_matches_paper():
+    """Flat ring gossip is the chatty baseline; the hierarchy beats it."""
+    R = 64
+    ring = build_sync_plan(SyncConfig("ring"), R)
+    multi = build_sync_plan(SyncConfig("multiscale"), R)
+    allred = build_sync_plan(SyncConfig("allreduce"), R)
+    assert allred.transmissions < multi.transmissions < ring.transmissions
+    assert build_sync_plan(SyncConfig("allreduce"), 1).transmissions == 0

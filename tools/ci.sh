@@ -7,6 +7,10 @@
 #                                   #   (n=500, trials=1, both engine
 #                                   #   backends — guards the plan/execute
 #                                   #   hot path against regressions)
+#                                   # + compressed decentralized-train smoke
+#                                   #   (2 steps, topk+rotation, multiscale,
+#                                   #   R=8 — guards the SyncPlan/execute
+#                                   #   training path end to end)
 #
 # Works offline: hypothesis is optional (property tests skip cleanly,
 # see tests/hypothesis_compat.py).
@@ -31,6 +35,9 @@ if [[ "${REPRO_BENCH_SMOKE:-0}" == "1" ]]; then
     echo "== benchmark smoke (fig3 n=500 trials=1, backend=pallas) =="
     python -m benchmarks.fig3_vs_path_averaging --sizes 500 --trials 1 \
         --backend pallas --artifact fig3_smoke
+    echo "== compressed decentralized-train smoke (R=8, topk, multiscale) =="
+    python examples/decentralized_consensus.py --strategy multiscale \
+        --compress topk --rotate 4 --replicas 8 --steps 2
 fi
 
 echo "CI OK"
