@@ -12,7 +12,7 @@ from .common import csv_line, save_artifact
 
 
 def run(n: int = 2000, trials: int = 3, eps: float = 1e-4,
-        max_k: int = 6) -> list[str]:
+        max_k: int = 6, artifact: str = "fig2_levels") -> list[str]:
     rows = {}
     t0 = time.time()
     for k in range(2, max_k + 1):
@@ -28,7 +28,7 @@ def run(n: int = 2000, trials: int = 3, eps: float = 1e-4,
             "messages_std": float(np.std(msgs)),
             "err_mean": float(np.mean(errs)),
         }
-    save_artifact("fig2_levels", {"n": n, "eps": eps, "rows": rows})
+    save_artifact(artifact, {"n": n, "eps": eps, "rows": rows})
     total_us = (time.time() - t0) * 1e6
     out = []
     best_k = min(rows, key=lambda k: rows[k]["messages_mean"])

@@ -32,6 +32,20 @@ lowered replica_groups index the mesh device assignment (reshapes of the
 replica axis remap them), so the raw `id // pod_size` heuristic is only
 the fallback.
 
+`--wallclock` additionally records the serialized-vs-overlapped
+comparison: `serialized_ms` chains a stand-in backward compute into the
+sync (the old pipeline — sync strictly after backward), `overlapped_ms`
+runs the same compute and the sync of an INDEPENDENT (previous-step)
+gradient buffer in one program (the async one-step pipeline,
+`dist.async_sync`), both through the shard_map executor so the
+collectives are scheduling-explicit; `overlap_delta_ms` is the
+wall-clock the overlap reclaims.  Timed for the representative subset
+`OVERLAP_TIMED` (exact baselines + both multiscale variants) — the
+64-round flat ring is minutes of pure collective chatter per call on
+the emulated mesh and adds nothing to the comparison.  On the emulated
+host mesh the delta reflects scheduler behavior, not real interconnect
+overlap — `wallclock_emulated` flags it.
+
 Run standalone (sets its own device count): python -m benchmarks.sync_collectives
     --wallclock   additionally times the compiled sync on the available
                   devices (skips cleanly on single-device hosts)
@@ -54,7 +68,7 @@ def run(wallclock: bool = False) -> list[str]:
 
     from repro.dist import (
         CompressionConfig, SyncConfig, build_sync_plan, execute_sync,
-        plan_wire_bytes, suggest_levels, wire_fraction,
+        execute_sync_sharded, plan_wire_bytes, suggest_levels, wire_fraction,
     )
     from repro.launch.hlo_analysis import collective_bytes, device_pod_map
     from repro.launch.mesh import set_mesh
@@ -92,6 +106,10 @@ def run(wallclock: bool = False) -> list[str]:
         "multiscale_rotated": SyncConfig("multiscale", levels=levels,
                                          rotation_period=4),
     }
+    # serialized-vs-overlapped timing subset (see module docstring)
+    OVERLAP_TIMED = {
+        "allreduce", "hierarchical", "multiscale", "multiscale_exact",
+    }
     # 16 replicas per "pod"; partition ids map through the assignment
     pod_of = device_pod_map(list(mesh.devices.flat), pod_size=16)
     can_time = jax.device_count() >= 2
@@ -112,6 +130,26 @@ def run(wallclock: bool = False) -> list[str]:
             )
             for k, a in grads_abs.items()
         }
+        # stand-in backward for the serialized-vs-overlapped comparison:
+        # a per-replica matmul chain, replica-sharded like the gradients
+        act = jax.device_put(
+            np.random.default_rng(1).normal(0, 1, (R, 128, 128)).astype(
+                np.float32
+            ),
+            NamedSharding(mesh, P("replica", None, None)),
+        )
+
+        def backward_like(a):
+            for _ in range(4):
+                a = jnp.tanh(jnp.einsum("rij,rjk->rik", a, a) / 128.0)
+            return a
+
+        def time_compiled(fn, args, reps=3):
+            jax.block_until_ready(fn(*args))  # warm-up / compile
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                jax.block_until_ready(fn(*args))
+            return (time.perf_counter() - t0) * 1e3 / reps
     rows, lines = {}, []
     # dense-base mixing collectives per (strategy, levels, rounds,
     # exact_fusion): compressed/rotated variants inherit their base's
@@ -180,6 +218,36 @@ def run(wallclock: bool = False) -> list[str]:
                 f"ms_per_sync={ms:.1f} devices={jax.device_count()} "
                 f"emulated={emulated}",
             ))
+        if wallclock and can_time and name in OVERLAP_TIMED:
+            # serialized (backward then sync, data-dependent) vs
+            # overlapped (backward plus the sync of an independent
+            # previous-step buffer — the async one-step pipeline), both
+            # through the shard_map executor
+            def serialized_fn(g, a, s, p=plan):
+                h = backward_like(a)
+                # the sync input depends on the backward product
+                g = jax.tree.map(
+                    lambda x: x + jnp.tanh(jnp.mean(h)) * 1e-20, g
+                )
+                out, _ = execute_sync_sharded(p, g, None, s, mesh=mesh)
+                return out, h
+
+            def overlapped_fn(g, a, s, p=plan):
+                out, _ = execute_sync_sharded(p, g, None, s, mesh=mesh)
+                h = backward_like(a)
+                return out, h
+
+            args2 = (grads, act, jnp.int32(0))
+            ser_ms = time_compiled(jax.jit(serialized_fn), args2)
+            ovl_ms = time_compiled(jax.jit(overlapped_fn), args2)
+            rows[name]["serialized_ms"] = ser_ms
+            rows[name]["overlapped_ms"] = ovl_ms
+            rows[name]["overlap_delta_ms"] = ser_ms - ovl_ms
+            lines.append(csv_line(
+                f"sync/{name}/overlap", ovl_ms * 1e3,
+                f"serialized_ms={ser_ms:.1f} overlapped_ms={ovl_ms:.1f} "
+                f"delta_ms={ser_ms - ovl_ms:.1f} emulated={emulated}",
+            ))
     if wallclock and not can_time:
         lines.append(csv_line(
             "sync/wallclock", 0.0,
@@ -198,7 +266,8 @@ def run(wallclock: bool = False) -> list[str]:
                 payload[k] = prev[k]
         for name, row in payload["rows"].items():
             old = prev.get("rows", {}).get(name, {})
-            for k in ("wallclock_ms", "wallclock_emulated"):
+            for k in ("wallclock_ms", "wallclock_emulated", "serialized_ms",
+                      "overlapped_ms", "overlap_delta_ms"):
                 if k in old:
                     row[k] = old[k]
     save_artifact("sync_collectives", payload)

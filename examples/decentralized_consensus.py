@@ -11,10 +11,14 @@ Compression (`--compress topk|int8`) exchanges error-feedback
 compressed payloads (unsent mass rides per-replica residuals in the
 train state); `--rotate P` cycles the paper's randomized cells: a
 P-entry permutation schedule re-assigns replicas to cells every step.
+`--overlap` switches to the async pipeline (one-step-delayed
+averaging): each step applies the previous step's mixed gradients
+while the fresh ones ride the double-buffered `prev_grads` state, so
+gossip overlaps backward compute (step 0 is warmup).
 
     PYTHONPATH=src python examples/decentralized_consensus.py --strategy multiscale
     PYTHONPATH=src python examples/decentralized_consensus.py \
-        --strategy multiscale --compress topk --rotate 4
+        --strategy multiscale --compress topk --rotate 4 --overlap
 """
 import argparse
 
@@ -41,6 +45,8 @@ def main() -> None:
     ap.add_argument("--topk-fraction", type=float, default=0.25)
     ap.add_argument("--rotate", type=int, default=0, metavar="P",
                     help="randomized-cell rotation period (0 = static cells)")
+    ap.add_argument("--overlap", action="store_true",
+                    help="one-step-delayed averaging: sync overlaps backward")
     args = ap.parse_args()
 
     R = args.replicas
@@ -58,10 +64,12 @@ def main() -> None:
         strategy=args.strategy, levels=levels,
         compression=CompressionConfig(args.compress, args.topk_fraction),
         rotation_period=args.rotate,
+        overlap="one_step" if args.overlap else "none",
     )
     state = init_decentralized_state(params_r, opt, sync=sync)
     print(f"strategy={args.strategy} R={R} levels={levels} "
           f"compress={args.compress} rotate={args.rotate or 'off'} "
+          f"overlap={'one_step' if args.overlap else 'off'} "
           f"(paper rule: cells of ~R^(2/3))")
     step = jax.jit(make_decentralized_step(cfg, opt, lambda s: 5e-2, sync, R))
     data = SyntheticLM(cfg.vocab_size, seq_len=64, global_batch=R * 2, seed=0)
@@ -72,7 +80,8 @@ def main() -> None:
         if s % 5 == 0 or s == args.steps - 1:
             print(f"step {s:3d}  loss={float(m['loss']):.3f}  "
                   f"consensus={float(m['consensus_distance']):.2e}  "
-                  f"wire={float(m['wire_bytes']) / 2**20:.1f}MiB")
+                  f"wire={float(m['wire_bytes']) / 2**20:.1f}MiB  "
+                  f"overlap={float(m['sync_overlap_fraction']):.0f}")
     if args.strategy in ("allreduce", "hierarchical") and args.compress == "none":
         assert float(m["consensus_distance"]) < 1e-6, "exact modes stay in sync"
         print("exact strategy: replicas remain bitwise-identical  OK")

@@ -4,16 +4,22 @@ multiscale gossip applied to data-parallel training replicas).
 Public surface:
   SyncConfig / build_sync_plan  static plan resolution (plan/execute split)
   SyncPlan / execute_sync       compiled compress->rotate->mix executor
+  async_execute_sync            one-step-delayed (overlapped) pipeline stage
+  execute_sync_sharded          the same mix as explicit shard_map collectives
   sync_gradients                one-shot strategy-dispatched mixing
   suggest_levels                the n^(2/3) recursive-partition rule
   rotation_schedule             step-indexed randomized-cell permutations
   compression                   error-feedback gradient compression
 """
+from .async_sync import async_execute_sync, execute_sync_sharded, init_inflight
 from .compression import (
     CompressionConfig, compress, decompress, init_residual, wire_fraction,
 )
 from .gossip_sync import STRATEGIES, SyncConfig, sync_gradients
-from .plan import SyncPlan, build_sync_plan, plan_wire_bytes, tree_payload_bytes
+from .plan import (
+    OVERLAP_MODES, SyncPlan, build_sync_plan, plan_wire_bytes,
+    tree_payload_bytes,
+)
 from .gossip_sync import execute_sync
 from .topology import (
     complete_matrix, default_rounds, hierarchy_matrix, is_doubly_stochastic,
@@ -21,10 +27,14 @@ from .topology import (
 )
 
 __all__ = [
+    "OVERLAP_MODES",
     "SyncConfig",
     "SyncPlan",
+    "async_execute_sync",
     "build_sync_plan",
     "execute_sync",
+    "execute_sync_sharded",
+    "init_inflight",
     "plan_wire_bytes",
     "tree_payload_bytes",
     "sync_gradients",

@@ -29,6 +29,7 @@ from .compression import CompressionConfig, wire_fraction
 from .topology import default_rounds, rotation_schedule, suggest_levels
 
 __all__ = [
+    "OVERLAP_MODES",
     "SyncConfig",
     "SyncPlan",
     "build_sync_plan",
@@ -38,6 +39,7 @@ __all__ = [
 
 STRATEGIES = ("allreduce", "hierarchical", "ring", "multiscale")
 _GOSSIP = ("ring", "multiscale")  # strategies whose topology can rotate
+OVERLAP_MODES = ("none", "one_step")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -59,6 +61,13 @@ class SyncConfig:
         drawn from `rotation_seed` and cycled by sync step.  0 (default)
         keeps the static assignment — exact strategies are unaffected
         either way.
+    overlap: "none" (default) runs sync strictly after the backward
+        pass; "one_step" selects one-step-delayed averaging (the paper's
+        asynchronous time model applied to step pipelining): each step
+        applies the PREVIOUS step's mixed gradients while the current
+        step's gossip has no data dependency on the backward and can
+        execute concurrently.  The train state then carries a
+        double-buffered `prev_grads` pytree (see `dist.async_sync`).
     """
 
     strategy: str = "allreduce"
@@ -68,6 +77,7 @@ class SyncConfig:
     compression: CompressionConfig = CompressionConfig()
     rotation_period: int = 0
     rotation_seed: int = 0
+    overlap: str = "none"
 
     def __post_init__(self):
         if self.strategy not in STRATEGIES:
@@ -101,6 +111,11 @@ class SyncConfig:
         if self.rotation_period < 0:
             raise ValueError(
                 f"rotation_period must be >= 0, got {self.rotation_period}"
+            )
+        if self.overlap not in OVERLAP_MODES:
+            raise ValueError(
+                f"unknown overlap mode {self.overlap!r}; expected one of "
+                f"{OVERLAP_MODES}"
             )
 
     def resolved_levels(self, R: int) -> tuple[int, ...]:
@@ -151,10 +166,15 @@ class SyncPlan:
     compression: CompressionConfig
     rotation: Optional[tuple[tuple[int, ...], ...]] = None
     rotation_inv: Optional[tuple[tuple[int, ...], ...]] = None
+    overlap: str = "none"
 
     @property
     def rotated(self) -> bool:
         return self.rotation is not None
+
+    @property
+    def overlapped(self) -> bool:
+        return self.overlap == "one_step"
 
     @property
     def transmissions(self) -> int:
@@ -227,6 +247,8 @@ def build_sync_plan(cfg: SyncConfig, R: int) -> SyncPlan:
         compression=cfg.compression,
         rotation=rotation,
         rotation_inv=rotation_inv,
+        # one replica has nothing to overlap with — resolve to serialized
+        overlap=cfg.overlap if R > 1 else "none",
     )
 
 

@@ -20,6 +20,20 @@ distance and the modeled per-sync wire bytes
 When compression is on, the train state carries a per-replica
 `residuals` pytree (grown by `init_decentralized_state(..., sync=...)`)
 so unsent gradient mass is re-injected next step.
+
+With `SyncConfig(overlap="one_step")` the step runs the ASYNC pipeline
+(`dist.async_sync`): the optimizer applies the PREVIOUS step's mixed
+gradients while the current step's fresh gradients become the new
+in-flight buffer (`prev_grads` in the state) — the mix has no data
+dependency on the backward pass, so the two overlap under jit (and
+lower as explicit shard_map collectives when a replica `mesh` is
+passed).  Staleness correction: the delayed gradients use the rotation
+index and learning rate of the step that produced them, so the
+overlapped trajectory is the serialized one delayed by exactly one
+step on a step-independent gradient stream.  Step 0 is warmup: the
+update is computed against the zero buffer and discarded; the metric
+`sync_overlap_fraction` reports 0.0 there and 1.0 on every overlapped
+step (always 0.0 in serialized mode).
 """
 from __future__ import annotations
 
@@ -31,7 +45,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.dist import (
-    SyncConfig, build_sync_plan, execute_sync, init_residual, plan_wire_bytes,
+    SyncConfig, build_sync_plan, execute_sync, execute_sync_sharded,
+    init_inflight, init_residual, plan_wire_bytes,
 )
 from repro.models import loss_fn
 from repro.models.config import ModelConfig
@@ -62,7 +77,9 @@ def init_decentralized_state(
     Pass the step's `SyncConfig` to size the state for it: with a
     non-``none`` compression scheme the state grows a per-replica
     error-feedback `residuals` pytree (zeros, same structure as params)
-    that `execute_sync` updates every step."""
+    that `execute_sync` updates every step; with `overlap="one_step"`
+    it grows the double-buffered `prev_grads` pytree (zeros) holding
+    the in-flight gradients of the async pipeline."""
     state = {
         "params": params_replicated,
         "opt": jax.vmap(optimizer.init)(params_replicated),
@@ -70,6 +87,11 @@ def init_decentralized_state(
     }
     if sync is not None and sync.compression.scheme != "none":
         state["residuals"] = init_residual(params_replicated)
+    # mirror the plan resolver: R=1 has nothing to overlap with, so the
+    # step never consumes (or re-emits) a prev_grads buffer there
+    R = jax.tree.leaves(params_replicated)[0].shape[0]
+    if sync is not None and sync.overlap == "one_step" and R > 1:
+        state["prev_grads"] = init_inflight(params_replicated)
     return state
 
 
@@ -113,6 +135,11 @@ def consensus_distance(params) -> jax.Array:
     return jnp.sqrt(sq / max(n, 1))
 
 
+def _tree_select(cond, on_true, on_false):
+    """Leafwise where over two same-structure pytrees (scalar cond)."""
+    return jax.tree.map(lambda a, b: jnp.where(cond, a, b), on_true, on_false)
+
+
 def make_decentralized_step(
     cfg: ModelConfig,
     optimizer: Optimizer,
@@ -121,6 +148,8 @@ def make_decentralized_step(
     num_replicas: int,
     *,
     clip_norm: float = 1.0,
+    mesh=None,
+    replica_axis: str = "replica",
 ) -> Callable:
     """Step over replicated state: every leaf of params/opt carries a
     leading replica axis R; batch is (R, per_replica, S).
@@ -129,16 +158,35 @@ def make_decentralized_step(
     returned step is a pure function of (state, batch) whose `step`
     counter drives the plan's rotation schedule.  With compression on,
     `state` must carry the `residuals` pytree from
-    `init_decentralized_state(..., sync=sync)`."""
+    `init_decentralized_state(..., sync=sync)`; with
+    `overlap="one_step"` it must also carry `prev_grads` (same
+    constructor).  Passing a 1-axis replica `mesh` routes the mix
+    through the shard_map executor (`dist.execute_sync_sharded`) so the
+    gossip lowers as explicit per-replica collectives."""
     R = num_replicas
     plan = build_sync_plan(sync, R)
     compressed = plan.compression.scheme != "none"
+    overlapped = plan.overlapped
+
+    def mix(grads, residuals, step):
+        if mesh is not None:
+            return execute_sync_sharded(
+                plan, grads, residuals, step, mesh=mesh,
+                axis_name=replica_axis,
+            )
+        return execute_sync(plan, grads, residuals, step)
 
     def step(state, batch):
         if compressed and "residuals" not in state:
             raise ValueError(
                 "compressed sync needs error-feedback state: build the train "
                 "state with init_decentralized_state(params, opt, sync=sync)"
+            )
+        if overlapped and "prev_grads" not in state:
+            raise ValueError(
+                "overlap='one_step' needs the double-buffered in-flight "
+                "gradients: build the train state with "
+                "init_decentralized_state(params, opt, sync=sync)"
             )
         def total_loss(p):
             # sum of per-replica losses => per-replica grads
@@ -157,17 +205,40 @@ def make_decentralized_step(
                                       jnp.maximum(gnorm, 1e-9)).astype(g.dtype),
             grads,
         )
-        grads, new_residuals = execute_sync(
-            plan, grads, state.get("residuals"), state["step"]
-        )
-        lr = lr_fn(state["step"])
+        if overlapped:
+            # apply the PREVIOUS step's mixed gradients (no data
+            # dependency on this step's backward — the sync collectives
+            # and the backward are independent dataflow branches);
+            # staleness correction: rotation index and learning rate of
+            # the step that produced them.  The fresh grads become the
+            # new in-flight buffer (async_execute_sync composition).
+            mixed, new_residuals = mix(
+                state["prev_grads"], state.get("residuals"),
+                state["step"] - 1,
+            )
+            prev_grads = grads
+            warm = (state["step"] > 0)
+            lr = lr_fn(jnp.maximum(state["step"] - 1, 0))
+        else:
+            mixed, new_residuals = mix(
+                grads, state.get("residuals"), state["step"]
+            )
+            prev_grads, warm = None, None
+            lr = lr_fn(state["step"])
         updates, opt = jax.vmap(
             lambda g, o, p: optimizer.update(g, o, p, lr)
-        )(grads, state["opt"], state["params"])
+        )(mixed, state["opt"], state["params"])
         params = apply_updates(state["params"], updates)
+        if overlapped:
+            # warmup step 0: nothing in flight yet — discard the (zero-
+            # gradient) update wholesale so optimizer state is untouched
+            params = _tree_select(warm, params, state["params"])
+            opt = _tree_select(warm, opt, state["opt"])
         new_state = {"params": params, "opt": opt, "step": state["step"] + 1}
         if "residuals" in state:
             new_state["residuals"] = new_residuals
+        if overlapped:
+            new_state["prev_grads"] = prev_grads
         metrics = {
             "loss": losses.mean(),
             "grad_norm": gnorm,
@@ -175,6 +246,12 @@ def make_decentralized_step(
             "consensus_distance": consensus_distance(params),
             # static given shapes — folds to a constant under jit
             "wire_bytes": jnp.float32(plan_wire_bytes(plan, grads)),
+            # fraction of this step's sync that ran concurrently with
+            # backward compute: 1 on every overlapped step, 0 during
+            # warmup and in serialized mode
+            "sync_overlap_fraction": (
+                warm.astype(jnp.float32) if overlapped else jnp.float32(0.0)
+            ),
         }
         return new_state, metrics
 

@@ -58,6 +58,11 @@ class Trainer:
         # report `wire_bytes` — see make_decentralized_step); restarts reset
         # the counter, matching its role as a per-run traffic gauge
         self.wire_bytes_total = 0.0
+        # running mean of `sync_overlap_fraction` (async one-step overlap:
+        # 0 on warmup / serialized steps, 1 on overlapped ones); same
+        # per-run semantics as wire_bytes_total
+        self._overlap_sum = 0.0
+        self._overlap_steps = 0
         if ckpt_dir and latest_step(ckpt_dir) is not None:
             self.state, step = restore_checkpoint(ckpt_dir, self.state)
             print(f"[trainer] resumed from step {step}")
@@ -93,6 +98,12 @@ class Trainer:
             if "wire_bytes" in rec:
                 self.wire_bytes_total += rec["wire_bytes"]
                 rec["wire_bytes_total"] = self.wire_bytes_total
+            if "sync_overlap_fraction" in rec:
+                self._overlap_sum += rec["sync_overlap_fraction"]
+                self._overlap_steps += 1
+                rec["sync_overlap_fraction_mean"] = (
+                    self._overlap_sum / self._overlap_steps
+                )
             t_last = now
             self._log(rec)
         # final checkpoint so a finished run is always resumable

@@ -24,6 +24,28 @@ if HAVE_HYPOTHESIS:
     settings.load_profile("ci")
 
 
+# ---- test tiering (markers registered in pyproject.toml) ----
+# `slow`: the multi-device subprocess tests (each spawns a fresh
+# interpreter with 8 emulated devices) and the vmap-/backend-parity
+# tests that re-run the simulation engine several times.  Everything
+# else is `tier1`.  tools/ci.sh runs `-m "not slow"`; the CI workflow's
+# second job runs `-m slow`; a bare pytest invocation runs both tiers.
+SLOW_FILES = {"test_dist_multidevice.py"}
+SLOW_TESTS = {
+    "test_trials_vmap_matches_sequential",
+    "test_pallas_backend_matches_lax",
+}
+
+
+def pytest_collection_modifyitems(config, items):
+    for item in items:
+        base = item.name.split("[")[0]
+        if item.path.name in SLOW_FILES or base in SLOW_TESTS:
+            item.add_marker(pytest.mark.slow)
+        else:
+            item.add_marker(pytest.mark.tier1)
+
+
 @pytest.fixture(scope="session")
 def rgg500():
     from repro.core import random_geometric_graph

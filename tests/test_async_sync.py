@@ -1,0 +1,181 @@
+"""Async (one-step-delayed) gradient sync: delay equivalence, EF
+conservation under overlap, warmup semantics, state plumbing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduce_config
+from repro.data import SyntheticLM
+from repro.dist import (
+    CompressionConfig, SyncConfig, async_execute_sync, build_sync_plan,
+    execute_sync, init_inflight, init_residual,
+)
+from repro.models import Transformer
+from repro.optim import adamw, apply_updates, sgdm
+from repro.train import init_decentralized_state, make_decentralized_step
+
+R = 8
+
+
+def _const_grads(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "a": jnp.asarray(rng.normal(size=(R, 5, 3)), jnp.float32),
+        "b": jnp.asarray(rng.normal(size=(R, 7)), jnp.float32),
+    }
+
+
+def _params0():
+    return {
+        "a": jnp.ones((R, 5, 3), jnp.float32),
+        "b": jnp.full((R, 7), -0.5, jnp.float32),
+    }
+
+
+def _apply(opt, params, opt_state, grads, lr):
+    upd, new_opt = jax.vmap(
+        lambda g, o, p: opt.update(g, o, p, lr)
+    )(grads, opt_state, params)
+    return apply_updates(params, upd), new_opt
+
+
+@pytest.mark.parametrize("cfg,opt_name", [
+    (SyncConfig("multiscale", exact_fusion=True, overlap="one_step"), "sgdm"),
+    (SyncConfig("multiscale", rotation_period=3, rotation_seed=7,
+                overlap="one_step"), "sgdm"),
+    (SyncConfig("ring", rounds=(8,), overlap="one_step"), "adamw"),
+    (SyncConfig("allreduce", overlap="one_step"), "adamw"),
+])
+def test_one_step_delay_matches_serialized_constant_stream(cfg, opt_name):
+    """The equivalence contract: on a constant gradient stream the
+    overlapped trajectory is EXACTLY the serialized trajectory delayed
+    by one step — same mixing (rotation index t-1 for step-t's delayed
+    grads), same learning rate, bitwise-equal iterates post-warmup."""
+    plan = build_sync_plan(cfg, R)
+    assert plan.overlapped
+    opt = {"sgdm": sgdm(), "adamw": adamw()}[opt_name]
+    G, T, lr = _const_grads(), 5, 0.1
+
+    # serialized reference
+    p_s = _params0()
+    o_s = jax.vmap(opt.init)(p_s)
+    traj = []
+    for t in range(T):
+        mixed, _ = execute_sync(plan, G, None, t)
+        p_s, o_s = _apply(opt, p_s, o_s, mixed, lr)
+        traj.append(jax.tree.map(np.asarray, p_s))
+
+    # overlapped: step 0 is warmup (zero buffer in flight, update
+    # discarded); step t >= 1 applies the step-(t-1) mix
+    p_o = _params0()
+    o_o = jax.vmap(opt.init)(p_o)
+    inflight = init_inflight(G)
+    for t in range(T + 1):
+        applied, inflight, _ = async_execute_sync(plan, G, inflight, None, t)
+        p_new, o_new = _apply(opt, p_o, o_o, applied, lr)
+        if t > 0:  # the warmup step discards its (zero-gradient) update
+            p_o, o_o = p_new, o_new
+            for k in G:
+                np.testing.assert_array_equal(
+                    traj[t - 1][k], np.asarray(p_o[k])
+                )
+
+
+def test_ef_residual_conservation_under_overlap():
+    """Error-feedback accounting stays conserving through the async
+    pipeline: at every step, applied mass + residual mass + in-flight
+    mass equals the total injected gradient mass (nothing is created or
+    destroyed by delaying the sync one step)."""
+    cfg = SyncConfig("multiscale", exact_fusion=True, overlap="one_step",
+                     compression=CompressionConfig("topk", 0.25))
+    plan = build_sync_plan(cfg, R)
+    G = _const_grads(seed=3)
+    inflight = init_inflight(G)
+    residuals = init_residual(G)
+    applied_mass = {k: np.zeros(G[k].shape[1:], np.float64) for k in G}
+    for t in range(12):
+        applied, inflight, residuals = async_execute_sync(
+            plan, G, inflight, residuals, t
+        )
+        for k in G:
+            # exact fusion preserves the replica mean of the payload, so
+            # accumulating the applied mean tracks transmitted mass
+            applied_mass[k] += np.asarray(applied[k], np.float64).mean(0)
+            injected = (t + 1) * np.asarray(G[k], np.float64).mean(0)
+            in_system = (
+                applied_mass[k]
+                + np.asarray(residuals[k], np.float64).mean(0)
+                + np.asarray(inflight[k], np.float64).mean(0)
+            )
+            np.testing.assert_allclose(in_system, injected,
+                                       rtol=1e-4, atol=1e-5)
+
+
+def test_overlap_config_validation():
+    with pytest.raises(ValueError, match="overlap mode"):
+        SyncConfig("multiscale", overlap="two_step")
+    # a single replica has nothing to overlap with
+    assert build_sync_plan(
+        SyncConfig("allreduce", overlap="one_step"), 1
+    ).overlap == "none"
+
+
+def _tiny_setup(sync):
+    cfg = reduce_config(get_config("llama3.2-3b"))
+    model = Transformer(cfg, model_axis=1)
+    Rr = 4
+    opt = sgdm()
+    base = model.init(jax.random.PRNGKey(0))
+    params_r = jax.tree.map(
+        lambda p: jnp.broadcast_to(p[None], (Rr,) + p.shape), base
+    )
+    state = init_decentralized_state(params_r, opt, sync=sync)
+    step = jax.jit(make_decentralized_step(cfg, opt, lambda s: 1e-2, sync, Rr))
+    data = SyntheticLM(cfg.vocab_size, seq_len=16, global_batch=Rr * 2, seed=5)
+
+    def batch_at(s):
+        b = data.batch_at(s)
+        return {
+            k: jnp.asarray(v.reshape(Rr, 2, *v.shape[1:])) for k, v in b.items()
+        }
+
+    return state, step, batch_at
+
+
+def test_overlap_warmup_step_is_noop_then_trains():
+    sync = SyncConfig("multiscale", overlap="one_step")
+    state, step, batch_at = _tiny_setup(sync)
+    assert "prev_grads" in state
+    p0 = np.asarray(state["params"]["embed"]).copy()
+    state, m = step(state, batch_at(0))
+    # warmup: no delayed gradients yet — params and opt must be untouched
+    np.testing.assert_array_equal(p0, np.asarray(state["params"]["embed"]))
+    assert float(m["sync_overlap_fraction"]) == 0.0
+    # the freshly produced gradients are now in flight
+    assert float(jnp.abs(state["prev_grads"]["embed"]).max()) > 0
+    for s in range(1, 4):
+        state, m = step(state, batch_at(s))
+        assert float(m["sync_overlap_fraction"]) == 1.0
+        assert np.isfinite(float(m["loss"]))
+    assert not np.array_equal(p0, np.asarray(state["params"]["embed"]))
+    # gossip still holds the replicas inside the consensus ball
+    assert float(m["consensus_distance"]) < 1e-2
+
+
+def test_overlap_requires_prev_grads_state():
+    sync = SyncConfig("multiscale", overlap="one_step")
+    serial = SyncConfig("multiscale")
+    state, _, batch_at = _tiny_setup(serial)  # state sized WITHOUT overlap
+    cfg = reduce_config(get_config("llama3.2-3b"))
+    step = make_decentralized_step(cfg, sgdm(), lambda s: 1e-2, sync, 4)
+    with pytest.raises(ValueError, match="in-flight"):
+        step(state, batch_at(0))
+
+
+def test_serialized_step_reports_zero_overlap_fraction():
+    sync = SyncConfig("multiscale")
+    state, step, batch_at = _tiny_setup(sync)
+    assert "prev_grads" not in state
+    _, m = step(state, batch_at(0))
+    assert float(m["sync_overlap_fraction"]) == 0.0

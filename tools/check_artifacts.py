@@ -1,0 +1,97 @@
+#!/usr/bin/env python
+"""Benchmark-regression gate over the committed artifacts.
+
+Re-runs the fig2 smoke (same n / eps / seeds as the committed run —
+the benchmark is deterministic, so honest drift comes from algorithm
+changes, not noise) and compares per-level-count message means against
+`benchmarks/artifacts/fig2_levels.json` within a relative tolerance.
+Artifact drift then fails CI loudly instead of being silently committed
+the next time someone regenerates the artifacts.
+
+The fresh run is written to a scratch artifact (`fig2_levels_check`) so
+the committed file is never clobbered by a drifting run — regenerating
+the committed artifact on purpose stays an explicit
+`python -m benchmarks.run --only fig2`.
+
+    python tools/check_artifacts.py [--tolerance 0.15] [--trials N]
+
+Exit status: 0 when every row is within tolerance, 1 on drift or a
+missing committed artifact.  Wired into tools/ci.sh as the fig2 smoke.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+COMMITTED = "fig2_levels"
+SCRATCH = "fig2_levels_check"
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tolerance", type=float, default=0.15,
+                    help="max relative drift of messages_mean per level count")
+    ap.add_argument("--trials", type=int, default=None,
+                    help="override trial count of the fresh run (defaults "
+                         "to 3, the committed profile)")
+    args = ap.parse_args()
+
+    from benchmarks import fig2_levels
+    from benchmarks.common import load_artifact
+
+    committed = load_artifact(COMMITTED)
+    if committed is None:
+        print(f"check_artifacts: FAIL — committed artifact "
+              f"benchmarks/artifacts/{COMMITTED}.json is missing; run "
+              f"`python -m benchmarks.run --only fig2` and commit the result")
+        return 1
+
+    ks = sorted(int(k) for k in committed["rows"])
+    trials = args.trials if args.trials is not None else 3
+    print(f"check_artifacts: re-running fig2 smoke "
+          f"(n={committed['n']}, eps={committed['eps']}, trials={trials}, "
+          f"k={ks[0]}..{ks[-1]}) against the committed artifact "
+          f"(tolerance ±{args.tolerance:.0%})")
+    fig2_levels.run(
+        n=int(committed["n"]), trials=trials, eps=float(committed["eps"]),
+        max_k=ks[-1], artifact=SCRATCH,
+    )
+    fresh = load_artifact(SCRATCH)
+
+    failures = []
+    for k in ks:
+        want = float(committed["rows"][str(k)]["messages_mean"])
+        got_row = fresh["rows"].get(k, fresh["rows"].get(str(k)))
+        if got_row is None:
+            failures.append(f"  k={k}: missing from the fresh run")
+            continue
+        got = float(got_row["messages_mean"])
+        rel = abs(got - want) / max(want, 1.0)
+        status = "ok" if rel <= args.tolerance else "DRIFT"
+        print(f"  k={k}: committed={want:.0f} fresh={got:.0f} "
+              f"rel={rel:+.1%} [{status}]")
+        if rel > args.tolerance:
+            failures.append(
+                f"  k={k}: messages_mean drifted {rel:.1%} "
+                f"(committed {want:.0f} -> fresh {got:.0f}, "
+                f"tolerance {args.tolerance:.0%})"
+            )
+
+    if failures:
+        print("check_artifacts: FAIL — per-algorithm message counts drifted "
+              "from the committed artifact:")
+        print("\n".join(failures))
+        print("If the drift is intentional (algorithm change), regenerate "
+              "and commit the artifact: python -m benchmarks.run --only fig2")
+        return 1
+    print("check_artifacts: OK — fig2 message counts within "
+          f"±{args.tolerance:.0%} of the committed artifact")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

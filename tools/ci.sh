@@ -1,16 +1,28 @@
 #!/usr/bin/env bash
-# CI entry point: tier-1 test suite + a fast benchmark smoke.
+# CI entry point: tier-1 test suite + a fast benchmark smoke gated by the
+# artifact-regression check.
 #
-#   tools/ci.sh                     # tier-1 + fig2 smoke
+#   tools/ci.sh                     # tier-1 (-m "not slow") + fig2 smoke
+#                                   #   through tools/check_artifacts.py
+#                                   #   (±15% message-count gate vs the
+#                                   #   committed artifact)
 #   tools/ci.sh --no-bench          # tests only
+#   tools/ci.sh --bench-only        # gate + smokes only (CI job 2: the
+#                                   #   tier1 job already ran the tests)
 #   REPRO_BENCH_SMOKE=1 tools/ci.sh # + fig3 device-resident smoke
 #                                   #   (n=500, trials=1, both engine
-#                                   #   backends — guards the plan/execute
-#                                   #   hot path against regressions)
+#                                   #   backends — backend-suffixed
+#                                   #   artifacts so the pallas run does
+#                                   #   not clobber the lax run's
+#                                   #   wall-clock/backend record)
 #                                   # + compressed decentralized-train smoke
 #                                   #   (2 steps, topk+rotation, multiscale,
-#                                   #   R=8 — guards the SyncPlan/execute
-#                                   #   training path end to end)
+#                                   #   R=8) and an async-overlap train
+#                                   #   smoke (one-step-delayed averaging)
+#
+# The slow tier (multi-device subprocess + vmap-/backend-parity tests) is
+# NOT run here — .github/workflows/ci.yml's second job runs `-m slow`.
+# A bare `python -m pytest -x -q` still runs both tiers.
 #
 # Works offline: hypothesis is optional (property tests skip cleanly,
 # see tests/hypothesis_compat.py).
@@ -19,25 +31,31 @@ cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-echo "== tier-1 tests =="
-python -m pytest -x -q
+if [[ "${1:-}" != "--bench-only" ]]; then
+    echo "== tier-1 tests (-m 'not slow') =="
+    python -m pytest -x -q -m "not slow"
+fi
 
 if [[ "${1:-}" != "--no-bench" ]]; then
-    echo "== benchmark smoke (fig2) =="
-    python -m benchmarks.run --only fig2
+    echo "== benchmark smoke + artifact-regression gate (fig2) =="
+    python tools/check_artifacts.py
 fi
 
 if [[ "${REPRO_BENCH_SMOKE:-0}" == "1" ]]; then
-    # scratch artifact name: the smoke must not clobber the full-run artifact
+    # scratch artifact names: the smoke must not clobber the full-run
+    # artifact, and each backend writes its own record
     echo "== benchmark smoke (fig3 n=500 trials=1, backend=lax) =="
     python -m benchmarks.fig3_vs_path_averaging --sizes 500 --trials 1 \
-        --backend lax --artifact fig3_smoke
+        --backend lax --artifact fig3_smoke_lax
     echo "== benchmark smoke (fig3 n=500 trials=1, backend=pallas) =="
     python -m benchmarks.fig3_vs_path_averaging --sizes 500 --trials 1 \
-        --backend pallas --artifact fig3_smoke
+        --backend pallas --artifact fig3_smoke_pallas
     echo "== compressed decentralized-train smoke (R=8, topk, multiscale) =="
     python examples/decentralized_consensus.py --strategy multiscale \
         --compress topk --rotate 4 --replicas 8 --steps 2
+    echo "== async-overlap decentralized-train smoke (R=8, one_step) =="
+    python examples/decentralized_consensus.py --strategy multiscale \
+        --overlap --replicas 8 --steps 3
 fi
 
 echo "CI OK"
