@@ -21,7 +21,7 @@ import numpy as np
 
 ARTIFACTS = os.path.join(os.path.dirname(__file__), "artifacts")
 
-ENGINE_BACKENDS = ("lax", "pallas")
+ENGINE_BACKENDS = ("lax", "pallas", "matmul")
 
 
 def timed(fn, *args, **kwargs):

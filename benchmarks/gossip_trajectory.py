@@ -1,0 +1,140 @@
+"""BENCH_gossip.json — the standardized gossip perf-trajectory artifact.
+
+Every entry snapshots the simulation hot path's measured performance at
+one commit: the fig3 smoke wall-clocks per engine backend (from the
+backend-suffixed smoke artifacts `fig3_smoke_lax` / `fig3_smoke_pallas`)
+plus the pair-apply kernel microbenchmark sweep.  The file lives at the
+repo root and is append-only (one entry per (commit, label);
+re-running replaces that entry), so future PRs diff their numbers
+against a measured baseline instead of an empty trajectory.
+
+The fig3 numbers are read from whatever smoke artifacts are on disk —
+regenerate them FIRST so the entry reflects the code being stamped
+(`REPRO_BENCH_SMOKE=1 tools/ci.sh` does this in the right order).
+Entries measured on an uncommitted tree are stamped `<sha>-dirty`.
+
+    python -m benchmarks.gossip_trajectory [--label msg] [--no-kernels]
+
+Also exposed as the `gossip` suite in `benchmarks.run`.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import time
+
+from .common import ARTIFACTS, csv_line, load_artifact
+
+TRAJECTORY = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "BENCH_gossip.json",
+)
+SMOKE_ARTIFACTS = {"lax": "fig3_smoke_lax", "pallas": "fig3_smoke_pallas"}
+
+
+def _git_commit() -> str:
+    """Short HEAD sha, suffixed `-dirty` when the working tree differs
+    from it — measurements from uncommitted trees must not masquerade
+    as the clean commit's record."""
+    repo = os.path.dirname(TRAJECTORY)
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=10, cwd=repo,
+        ).stdout.strip() or "unknown"
+        dirty = subprocess.run(
+            ["git", "status", "--porcelain", "--untracked-files=no"],
+            capture_output=True, text=True, timeout=10, cwd=repo,
+        ).stdout.strip()
+        return f"{sha}-dirty" if dirty else sha
+    except Exception:
+        return "unknown"
+
+
+def load_trajectory() -> list:
+    if not os.path.exists(TRAJECTORY):
+        return []
+    return json.load(open(TRAJECTORY))
+
+
+def record_entry(entry: dict) -> None:
+    """Append `entry`, replacing any prior entry for the same
+    (commit, label) — re-running at one commit updates in place while
+    distinct labels (e.g. a pinned baseline) survive."""
+    key = (entry["commit"], entry.get("label", ""))
+    traj = [
+        e for e in load_trajectory()
+        if (e.get("commit"), e.get("label", "")) != key
+    ]
+    traj.append(entry)
+    with open(TRAJECTORY, "w") as f:
+        json.dump(traj, f, indent=1)
+
+
+def build_entry(label: str = "", kernels: bool = True) -> dict:
+    entry = {
+        "commit": _git_commit(),
+        "unix_time": int(time.time()),
+        "label": label,
+        "fig3_smoke": {},
+    }
+    for backend, name in SMOKE_ARTIFACTS.items():
+        art = load_artifact(name)
+        if art is None:
+            entry["fig3_smoke"][backend] = {
+                "missing": f"benchmarks/artifacts/{name}.json — run "
+                           "REPRO_BENCH_SMOKE=1 tools/ci.sh first"
+            }
+            continue
+        entry["fig3_smoke"][backend] = {
+            "n": sorted(int(n) for a in art["summary"].values() for n in a)[0],
+            "trials": art["trials"],
+            "jit_warmup_s": art.get("jit_warmup_s"),
+            "wall_clock_s": art["wall_clock_s"],
+            "messages_mean": {
+                algo: next(iter(rows.values()))["messages_mean"]
+                for algo, rows in art["summary"].items()
+            },
+        }
+    if kernels:
+        from .kernel_bench import pair_apply_bench
+
+        entry["pair_apply_us"] = pair_apply_bench(as_rows=False)
+    return entry
+
+
+def run(label: str = "", kernels: bool = True) -> list[str]:
+    entry = build_entry(label=label, kernels=kernels)
+    record_entry(entry)
+    lines = []
+    for backend, rec in entry["fig3_smoke"].items():
+        if "missing" in rec:
+            lines.append(csv_line(f"gossip/fig3_smoke_{backend}", 0.0,
+                                  rec["missing"]))
+            continue
+        ms = rec["wall_clock_s"].get("multiscale", 0.0)
+        lines.append(csv_line(
+            f"gossip/fig3_smoke_{backend}", ms * 1e6,
+            f"n={rec['n']} multiscale_wall={ms:.2f}s "
+            f"msgs={rec['messages_mean'].get('multiscale', 0):.0f}",
+        ))
+    for key, us in entry.get("pair_apply_us", {}).items():
+        lines.append(csv_line(f"gossip/pair_apply_{key}", us, "see kernels"))
+    lines.append(csv_line(
+        "gossip/trajectory", 0.0,
+        f"entries={len(load_trajectory())} -> BENCH_gossip.json "
+        f"commit={entry['commit']}",
+    ))
+    return lines
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--label", default="")
+    ap.add_argument("--no-kernels", action="store_true")
+    args = ap.parse_args()
+    for line in run(label=args.label, kernels=not args.no_kernels):
+        print(line)

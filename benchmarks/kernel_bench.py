@@ -20,6 +20,61 @@ def _time(fn, *args, reps=5):
     return (time.time() - t0) / reps * 1e6  # us
 
 
+def pair_apply_bench(
+    sweep=((64, 16), (64, 64), (256, 16)), B: int = 32, V: int = 2,
+    as_rows: bool = True,
+):
+    """Presampled-schedule value-pass sweep over (schedule length T,
+    cell size C): the lax scan oracle, the Pallas pair-apply kernel in
+    interpret mode (kernel-validation path — NOT TPU performance), and
+    the associative-scan matmul composition (compose + cell-mixing
+    apply, the MXU-facing backend's XLA oracle path).
+
+    Returns CSV rows (`as_rows=True`) or a {key: us_per_call} dict for
+    the BENCH_gossip.json trajectory.
+    """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.schedule import compose_schedule
+    from repro.kernels.cell_mixing import cell_mixing
+    from repro.kernels.pair_apply import pair_apply, pair_apply_ref
+    from .common import csv_line
+
+    rng = np.random.default_rng(11)
+    rows, flat = [], {}
+    for T, C in sweep:
+        x = jnp.asarray(rng.normal(size=(B, C, V)), jnp.float32)
+        i = jnp.asarray(rng.integers(0, C, (T, B)), jnp.int32)
+        j = jnp.asarray(rng.integers(0, C, (T, B)), jnp.int32)
+        ui = jnp.asarray(rng.uniform(size=(T, B)) < 0.9)
+        uj = jnp.asarray(rng.uniform(size=(T, B)) < 0.95)
+
+        lax_f = jax.jit(pair_apply_ref)
+        matmul_f = jax.jit(lambda x, i, j, ui, uj: cell_mixing(
+            compose_schedule(C, i, j, ui, uj), x, rounds=1, use_pallas=False
+        ))
+        variants = {
+            "lax": lambda: lax_f(x, i, j, ui, uj),
+            "pallas_interp": lambda: pair_apply(
+                x, i, j, ui, uj, use_pallas=True, interpret=True
+            ),
+            "matmul": lambda: matmul_f(x, i, j, ui, uj),
+        }
+        for name, fn in variants.items():
+            us = _time(fn, reps=3 if name == "pallas_interp" else 5)
+            key = f"T{T}_C{C}_{name}"
+            flat[key] = us
+            rows.append(csv_line(
+                f"kernel/pair_apply_{key}", us,
+                f"B={B} V={V} ticks_per_us={T/max(us,1e-9):.2f}"
+                + (" (interpreter, not TPU perf)"
+                   if name == "pallas_interp" else ""),
+            ))
+    return rows if as_rows else flat
+
+
 def run() -> list[str]:
     import jax.numpy as jnp
 
@@ -49,6 +104,9 @@ def run() -> list[str]:
         "engine/async_ticks", dt * 1e6,
         f"cells={len(subs)} ticks={ticks} ticks_per_sec={ticks/dt:.0f}",
     ))
+
+    # presampled-schedule value pass (lax vs pallas vs associative-scan)
+    lines.extend(pair_apply_bench())
 
     # synchronous cell mixing (jnp oracle = production XLA path)
     w = jnp.asarray(mixing_matrix(neighbors, degrees, n_nodes))

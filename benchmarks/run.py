@@ -26,7 +26,7 @@ def main() -> None:
 
     from . import (
         fig2_levels, fig3_vs_path_averaging, fig4_cdf, fig5_failures,
-        kernel_bench, roofline, table1_node_utilization,
+        gossip_trajectory, kernel_bench, roofline, table1_node_utilization,
     )
 
     suites = {
@@ -45,6 +45,7 @@ def main() -> None:
         "kernels": kernel_bench.run,
         "sync": lambda: _subprocess_lines("benchmarks.sync_collectives"),
         "roofline": roofline.run,
+        "gossip": gossip_trajectory.run,
     }
     if args.only:
         keep = set(args.only.split(","))

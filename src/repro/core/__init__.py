@@ -14,7 +14,13 @@ from .baselines import (
 )
 from .engine import EngineResult, execute_plan
 from .failures import handshake_cost
-from .gossip import GossipResult, batched_graphs, gossip_core, gossip_until
+from .gossip import (
+    GOSSIP_BACKENDS,
+    GossipResult,
+    batched_graphs,
+    gossip_core,
+    gossip_until,
+)
 from .metrics import relative_error, theorem2_bound
 from .multiscale import (
     LevelReport,
@@ -25,6 +31,12 @@ from .multiscale import (
 from .partition import Partition, auto_levels, build_partition
 from .plan import HierarchyPlan, LevelPlan, build_plan
 from .rgg import Graph, connectivity_radius, grid_graph, random_geometric_graph
+from .schedule import (
+    ExchangeSchedule,
+    compose_schedule,
+    sample_schedule,
+    sample_tick,
+)
 from .routing import (
     BatchedRoutes,
     Route,

@@ -9,12 +9,19 @@ gathers through the plan's route-incidence CSR plus one scatter-add, and
 the dissemination down-pass as a gather — no host round-trips between
 levels.  The executor is `vmap`-ped over trial seeds, so
 `execute_plan(plan, x0, seeds=[s0..sT])` simulates T independent
-Monte-Carlo trials in one compiled call.
+Monte-Carlo trials in one compiled call — and `mesh=` additionally
+`shard_map`s that trial axis over a 1-axis device mesh, so paper-scale
+trial counts (10-25) fan out over real hardware (trials are padded up
+to a device multiple and the padding discarded).
 
 Backends: ``backend="lax"`` is the reference inner kernel;
-``backend="pallas"`` routes each gossip chunk through the
-`kernels.cell_mixing` batched matmul (see `core.gossip`).  On non-TPU
-hosts the Pallas kernel runs in interpreter mode automatically.
+``backend="pallas"`` walks each chunk's presampled schedule with the
+`kernels.pair_apply` VMEM-resident TPU kernel (bitwise-identical to
+lax; non-TPU hosts dispatch to the jnp oracle); ``backend="matmul"``
+composes each chunk's mixing matrix with a log2 tree of batched MXU
+matmuls (values agree up to f32 rounding).  ``schedule="per_tick"``
+keeps the legacy sequential scan as the parity reference (see
+`core.gossip`).
 """
 from __future__ import annotations
 
@@ -26,7 +33,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .gossip import gossip_core
+from .gossip import GOSSIP_BACKENDS, gossip_core
 from .plan import HierarchyPlan
 
 __all__ = ["EngineResult", "execute_plan", "fi_ticks"]
@@ -34,8 +41,12 @@ __all__ = ["EngineResult", "execute_plan", "fi_ticks"]
 # Lighter XLA pipeline for the executor: these are small scatter/gather
 # loops where full optimization buys nothing measurable at runtime but
 # more than doubles compile time (the single-shot benchmark bottleneck
-# on CPU).
-_COMPILER_OPTS = {"xla_backend_optimization_level": 0}
+# on CPU).  The LLVM expensive-pass cut matters most: the executor's
+# scatter bodies spend their compile budget in LLVM, not in HLO passes.
+_COMPILER_OPTS = {
+    "xla_backend_optimization_level": 0,
+    "xla_llvm_disable_expensive_passes": True,
+}
 
 
 def fi_ticks(size: int, eps: float, scale: float, quadratic: bool) -> int:
@@ -119,6 +130,8 @@ def execute_plan(
     max_ticks_per_level: int = 2_000_000,
     check_every: int = 64,
     backend: str = "lax",
+    schedule: str = "presampled",
+    mesh=None,
     interpret: Optional[bool] = None,
     collect_usage: bool = False,
 ) -> EngineResult:
@@ -128,10 +141,15 @@ def execute_plan(
     x0 may be (n,) — shared across trials — or (T, n) per-trial.  Each
     seed drives one trial's exchange randomness; the plan (partition,
     election, routes) is shared, so trials differ only in gossip noise.
-    `collect_usage=True` additionally returns the raw per-level exchange
-    counts (for attribution audits); leave it off on the hot path.
+    `mesh=` (a 1-axis `jax.sharding.Mesh`) shards the vmapped trial
+    axis over devices via shard_map: T is padded up to a multiple of
+    the mesh size with throwaway trials, each device runs its local
+    slice of the vmap, and per-trial results are bitwise-independent of
+    the sharding.  `collect_usage=True` additionally returns the raw
+    per-level exchange counts (for attribution audits); leave it off on
+    the hot path.
     """
-    if backend not in ("lax", "pallas"):
+    if backend not in GOSSIP_BACKENDS:
         raise ValueError(f"unknown backend {backend!r}")
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
@@ -141,6 +159,11 @@ def execute_plan(
     per_trial_x0 = x0.ndim == 2
     if per_trial_x0 and x0.shape[0] != T:
         raise ValueError(f"x0 leading dim {x0.shape[0]} != trials {T}")
+    if mesh is not None and len(mesh.shape) != 1:
+        raise ValueError(
+            f"execute_plan wants a 1-axis trial mesh, got {dict(mesh.shape)}"
+        )
+    pad = 0 if mesh is None else (-T) % mesh.devices.size
     V = 2 if weighted else 1
     L = len(plan.levels)
     K = plan.k
@@ -187,7 +210,7 @@ def execute_plan(
                 c["edge_hops"], c["node_mask"],
                 eps_arr[li], jax.random.fold_in(key, li),
                 max_ticks=maxt_arr[li], check_every=chk, loss_p=loss_p,
-                backend=backend, interpret=interpret,
+                backend=backend, schedule=schedule, interpret=interpret,
             )
             # per-graph counters stay int32 on device; they are summed on
             # the host in int64 (jnp.sum would wrap without x64 mode)
@@ -235,7 +258,11 @@ def execute_plan(
             tuple(usages),
         )
 
-    keys = jnp.stack([jax.random.PRNGKey(int(s)) for s in seeds])
+    # throwaway padding trials bring T up to a mesh-device multiple
+    pad_seeds = tuple(seeds) + tuple(seeds[:1]) * pad
+    keys = jnp.stack([jax.random.PRNGKey(int(s)) for s in pad_seeds])
+    if per_trial_x0 and pad:
+        x0 = np.concatenate([x0, np.repeat(x0[:1], pad, axis=0)], axis=0)
     args = (
         jnp.asarray(x0),
         keys,
@@ -243,21 +270,45 @@ def execute_plan(
         jnp.asarray(maxt_levels, jnp.int32),
     )
     cache_key = (
-        T, per_trial_x0, weighted, loss_p, backend, interpret,
+        T, per_trial_x0, weighted, loss_p, backend, schedule, mesh, interpret,
         tuple(chk_levels), collect_usage,
     )
     fn = plan.exec_cache.get(cache_key)
     if fn is None:
         consts.extend(_level_consts(lp) for lp in plan.levels)
-        jitted = jax.jit(
-            jax.vmap(_run, in_axes=(0 if per_trial_x0 else None, 0, None, None))
-        )
+        if T == 1 and mesh is None:
+            # single-trial fast path: the batching interpreter roughly
+            # doubles trace time and XLA pays for size-1 batch dims on
+            # every op — run the trial unbatched and re-add the trial
+            # axis on the way out (per-trial results are independent of
+            # the batching, see test_trials_vmap_matches_sequential)
+            def run_v(x0_, keys_, eps_, maxt_):
+                out = _run(x0_[0] if per_trial_x0 else x0_, keys_[0],
+                           eps_, maxt_)
+                return jax.tree_util.tree_map(lambda a: a[None], out)
+        else:
+            run_v = jax.vmap(_run, in_axes=(0 if per_trial_x0 else None, 0, None, None))
+        if mesh is not None:
+            from jax.experimental.shard_map import shard_map
+            from jax.sharding import PartitionSpec as P
+
+            (axis,) = mesh.axis_names
+            run_v = shard_map(
+                run_v, mesh=mesh,
+                in_specs=(P(axis) if per_trial_x0 else P(), P(axis), P(), P()),
+                out_specs=P(axis), check_rep=False,
+            )
+        jitted = jax.jit(run_v)
         try:
             fn = jitted.lower(*args).compile(compiler_options=_COMPILER_OPTS)
         except Exception:  # options unsupported on this backend
             fn = jitted
         plan.exec_cache[cache_key] = fn
     xf, sends, lm, lt, lc, usages = fn(*args)
+    if pad:
+        xf, sends, lt, lc = xf[:T], sends[:T], lt[:T], lc[:T]
+        lm = tuple(m[:T] for m in lm)
+        usages = tuple(u[:T] for u in usages)
     # host-side int64 reduction of the per-graph int32 counters
     level_messages = np.stack(
         [np.asarray(m, np.int64).sum(axis=1) for m in lm], axis=1

@@ -19,16 +19,34 @@ transmission of an exchange succeeds w.p. `loss_p`; a lost request
 aborts the exchange, a lost reply leaves only the contacted node
 updated (mass distortion — exactly the failure the paper analyzes).
 
-Two execution backends produce the same exchange sequence (identical
-randomness, usage, and message accounting):
+Schedule / value split (`schedule="presampled"`, the default): every
+exchange decision depends only on ``(key, t)``, never on the values, so
+each `check_every` chunk first presamples its full ``(T, B)`` exchange
+schedule in one batched RNG pass (`core.schedule.sample_schedule` —
+usage and message accounting become one scatter-add / one reduction
+over the presampled arrays), then applies the pair list with the chosen
+value backend:
 
-* ``backend="lax"`` — the reference path: each tick updates the value
-  rows of the chosen pair directly;
-* ``backend="pallas"`` — each `check_every`-tick chunk accumulates its
-  pairwise averages into a (B, C, C) mixing matrix (identity plus row
-  averages) and applies it with the `kernels.cell_mixing` Pallas op, so
-  the batched pairwise-average inner kernel runs on the MXU.  Values
-  agree with the lax path up to f32 rounding.
+* ``backend="lax"`` — `kernels.pair_apply.pair_apply_ref`: a scan whose
+  body is just two gathers, one average, and two conditional writes
+  (the legacy tick with all sampling hoisted out);
+* ``backend="pallas"`` — the `kernels.pair_apply` TPU kernel walks the
+  schedule with the cell state resident in VMEM (no HBM round-trips);
+  its f32 op sequence matches the oracle exactly, so results are
+  bitwise-identical to the lax backend (non-TPU hosts dispatch to the
+  oracle; the kernel itself is validated in interpret mode by the
+  kernel tests);
+* ``backend="matmul"`` — `core.schedule.compose_schedule` folds the
+  chunk's elementary pair-average matrices with a log2(T) tree of
+  batched matmuls and applies the result via `kernels.cell_mixing`
+  (MXU work; values agree up to f32 rounding because matrix
+  composition reassociates the sums — integer accounting is still
+  exact).
+
+``schedule="per_tick"`` keeps the legacy sequential scan (sampling
+interleaved with value updates) as the bitwise-parity reference path;
+it supports the lax backend and the historical pallas
+eye-rebuild-then-scan branch.
 
 `gossip_core` is the pure-JAX function (usable inside a larger jit /
 vmap — the plan/execute engine in `core.engine` vmaps it over
@@ -53,7 +71,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["GossipResult", "gossip_core", "gossip_until", "batched_graphs"]
+from .schedule import compose_schedule, sample_schedule, sample_tick
+
+__all__ = ["GossipResult", "gossip_core", "gossip_until", "batched_graphs",
+           "GOSSIP_BACKENDS"]
+
+GOSSIP_BACKENDS = ("lax", "pallas", "matmul")
 
 
 @dataclasses.dataclass
@@ -76,58 +99,25 @@ class GossipResult:
         return self.x[..., 0] / np.maximum(self.x[..., 1], 1e-30)
 
 
-def _truncated_failure_hops(u, p, h):
-    """Hops transmitted for a message over h hops with per-hop success p.
-
-    Successes before first failure: S = floor(log u / log p); delivered
-    iff S >= h (transmits h); else transmits S + 1.  Returns
-    (delivered, hops_transmitted).
-    """
-    s = jnp.where(p < 1.0, jnp.floor(jnp.log(u) / jnp.log(jnp.maximum(p, 1e-12))), jnp.inf)
-    delivered = s >= h
-    return delivered, jnp.where(delivered, h, s + 1.0).astype(jnp.int32)
-
-
 def _one_tick(state, t, neighbors, degrees, n_nodes, edge_hops, key, loss_p):
+    """Legacy tick: sample-and-apply interleaved (the parity reference).
+    Sampling is shared with the presampled path (`schedule.sample_tick`)
+    so the two stay draw-for-draw identical by construction."""
     x, usage, msgs, done = state
-    B, C, D = neighbors.shape
-    kt = jax.random.fold_in(key, t)
-    ki, kj, kf, kr = jax.random.split(kt, 4)
+    B = neighbors.shape[0]
     bidx = jnp.arange(B)
-    # pick a waking node per graph (uniform over live nodes)
-    u = jax.random.uniform(ki, (B,))
-    i = jnp.minimum((u * n_nodes).astype(jnp.int32), n_nodes - 1)
-    deg_i = jnp.take_along_axis(degrees, i[:, None], axis=1)[:, 0]
-    v = jax.random.uniform(kj, (B,))
-    jidx = jnp.minimum((v * deg_i).astype(jnp.int32), jnp.maximum(deg_i - 1, 0))
-    j = neighbors[bidx, i, jidx]
-    j_safe = jnp.maximum(j, 0)
-    active = (~done) & (deg_i > 0) & (j >= 0)
-    hops = edge_hops[bidx, i, jidx]
-
-    if loss_p is None:
-        fwd_ok = jnp.ones((B,), bool)
-        rep_ok = jnp.ones((B,), bool)
-        cost = 2 * hops
-    else:
-        p = jnp.asarray(loss_p, x.dtype)
-        fwd_ok, fwd_hops = _truncated_failure_hops(
-            jax.random.uniform(kf, (B,)), p, hops
-        )
-        rep_ok, rep_hops = _truncated_failure_hops(
-            jax.random.uniform(kr, (B,)), p, hops
-        )
-        cost = fwd_hops + jnp.where(fwd_ok, rep_hops, 0)
-
-    xi = x[bidx, i]
-    xj = x[bidx, j_safe]
+    s = sample_tick(t, key, neighbors, degrees, n_nodes, edge_hops, loss_p,
+                    x.dtype)
+    active = (~done) & s.valid
+    xi = x[bidx, s.i]
+    xj = x[bidx, s.j]
     avg = 0.5 * (xi + xj)
-    upd_j = (active & fwd_ok)[:, None]          # j updates iff request arrived
-    upd_i = (active & fwd_ok & rep_ok)[:, None]  # i updates iff reply arrived
-    x = x.at[bidx, j_safe].set(jnp.where(upd_j, avg, xj))
-    x = x.at[bidx, i].set(jnp.where(upd_i, avg, xi))
-    usage = usage.at[bidx, i, jidx].add(active.astype(jnp.int32))
-    msgs = msgs + jnp.where(active, cost, 0)
+    upd_j = (active & s.fwd_ok)[:, None]           # j updates iff request arrived
+    upd_i = (active & s.fwd_ok & s.rep_ok)[:, None]  # i updates iff reply arrived
+    x = x.at[bidx, s.j].set(jnp.where(upd_j, avg, xj))
+    x = x.at[bidx, s.i].set(jnp.where(upd_i, avg, xi))
+    usage = usage.at[bidx, s.i, s.jidx].add(active.astype(jnp.int32))
+    msgs = msgs + jnp.where(active, s.cost, 0)
     return (x, usage, msgs, done), None
 
 
@@ -145,17 +135,26 @@ def gossip_core(
     check_every: int,
     loss_p: Optional[float],
     backend: str = "lax",
+    schedule: str = "presampled",
     interpret: bool = False,
 ):
     """Pure-JAX batched gossip loop; composable under jit and vmap.
 
     Returns (x, usage, msgs, done, ticks).  `backend` selects the inner
-    pairwise-average kernel (see module docstring); the random exchange
-    sequence, usage, and message counts are backend-independent.
-    `eps` and `max_ticks` may be traced scalars (the plan/execute engine
-    passes them at runtime so eps-oracle and fixed-iteration runs share
-    one compilation); `check_every` must be static (scan length).
+    pairwise-average kernel and `schedule` the presampled vs legacy
+    per-tick execution (see module docstring); the random exchange
+    sequence, usage, and message counts are backend- and
+    schedule-independent.  `eps` and `max_ticks` may be traced scalars
+    (the plan/execute engine passes them at runtime so eps-oracle and
+    fixed-iteration runs share one compilation); `check_every` must be
+    static (scan length).
     """
+    if backend not in GOSSIP_BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}")
+    if schedule not in ("presampled", "per_tick"):
+        raise ValueError(f"unknown schedule mode {schedule!r}")
+    if schedule == "per_tick" and backend == "matmul":
+        raise ValueError("backend='matmul' requires schedule='presampled'")
     B, C, D = neighbors.shape
     live = node_mask.astype(x0.dtype)[..., None]  # (B, C, 1)
     denom = jnp.maximum(live.sum(1), 1.0)
@@ -167,30 +166,16 @@ def gossip_core(
         d = (x - mean[:, None, :]) * live
         return jnp.sqrt((d**2).sum((1, 2)))
 
-    def tick(s, t):
-        return _one_tick(s, t, neighbors, degrees, n_nodes, edge_hops, key, loss_p)
-
-    def chunk(carry):
-        x, usage, msgs, done, ticks, t0 = carry
-        ts = t0 + jnp.arange(check_every)
-        if backend == "lax":
-            (x, usage, msgs, done), _ = jax.lax.scan(
-                tick, (x, usage, msgs, done), ts
-            )
-        else:
-            # accumulate the chunk's pair averages into a mixing matrix
-            # (identity + row averages — _one_tick applied to rows of I),
-            # then apply it with the Pallas batched matmul kernel
-            from repro.kernels.cell_mixing import cell_mixing
-
-            eye = jnp.broadcast_to(jnp.eye(C, dtype=x.dtype), (B, C, C))
-            (m, usage, msgs, done), _ = jax.lax.scan(
-                tick, (eye, usage, msgs, done), ts
-            )
-            x = cell_mixing(m, x, rounds=1, use_pallas=True, interpret=interpret)
-        ticks = ticks + jnp.where(done, 0, check_every)
-        done = done | (err(x) <= tol)
-        return (x, usage, msgs, done, ticks, t0 + check_every)
+    if schedule == "per_tick":
+        chunk = _per_tick_chunk(
+            neighbors, degrees, n_nodes, edge_hops, key, loss_p,
+            check_every, backend, interpret, err, tol,
+        )
+    else:
+        chunk = _presampled_chunk(
+            neighbors, degrees, n_nodes, edge_hops, key, loss_p,
+            check_every, backend, interpret, err, tol,
+        )
 
     def cond(carry):
         *_, done, _ticks, t0 = carry
@@ -205,9 +190,89 @@ def gossip_core(
     return x, usage, msgs, done, ticks
 
 
+def _presampled_chunk(neighbors, degrees, n_nodes, edge_hops, key, loss_p,
+                      check_every, backend, interpret, err, tol):
+    """Chunk body for the schedule/value split: one batched RNG pass for
+    the whole chunk, accounting as a single scatter-add + reduction,
+    then the value pass over the presampled pair list."""
+    from repro.kernels.pair_apply import pair_apply, pair_apply_ref
+
+    B, C, D = neighbors.shape
+    tb = jnp.broadcast_to(jnp.arange(B)[None, :], (check_every, B))
+
+    def chunk(carry):
+        x, usage, msgs, done, ticks, t0 = carry
+        ts = t0 + jnp.arange(check_every)
+        s = sample_schedule(ts, key, neighbors, degrees, n_nodes,
+                            edge_hops, loss_p, x.dtype)
+        active = s.valid & ~done[None, :]   # done is frozen within a chunk
+        upd_j = active & s.fwd_ok
+        upd_i = upd_j & s.rep_ok
+        usage = usage.at[tb, s.i, s.jidx].add(active.astype(jnp.int32))
+        msgs = msgs + jnp.where(active, s.cost, 0).sum(0)
+        if backend == "lax":
+            x = pair_apply_ref(x, s.i, s.j, upd_i, upd_j)
+        elif backend == "pallas":
+            # non-TPU hosts take the bitwise-identical oracle; the TPU
+            # kernel walks the schedule with the state in VMEM
+            x = pair_apply(x, s.i, s.j, upd_i, upd_j,
+                           use_pallas=not interpret, interpret=interpret)
+        else:  # matmul: associative composition, applied on the MXU
+            from repro.kernels.cell_mixing import cell_mixing
+
+            m = compose_schedule(C, s.i, s.j, upd_i, upd_j, x.dtype)
+            x = cell_mixing(m, x, rounds=1, use_pallas=not interpret,
+                            interpret=interpret)
+        ticks = ticks + jnp.where(done, 0, check_every)
+        done = done | (err(x) <= tol)
+        return (x, usage, msgs, done, ticks, t0 + check_every)
+
+    return chunk
+
+
+def _per_tick_chunk(neighbors, degrees, n_nodes, edge_hops, key, loss_p,
+                    check_every, backend, interpret, err, tol):
+    """Legacy chunk body: the sequential sample-and-apply scan."""
+    B, C, D = neighbors.shape
+
+    def tick(s, t):
+        return _one_tick(s, t, neighbors, degrees, n_nodes, edge_hops, key,
+                         loss_p)
+
+    # historical pallas branch: the chunk's pair averages accumulate into
+    # a mixing matrix (identity + row averages — _one_tick applied to
+    # rows of I) applied with the Pallas batched matmul kernel.  The
+    # identity seed is built once here, not per while-loop iteration.
+    eye = None
+    if backend == "pallas":
+        eye = jnp.broadcast_to(jnp.eye(C, dtype=jnp.float32), (B, C, C))
+
+    def chunk(carry):
+        x, usage, msgs, done, ticks, t0 = carry
+        ts = t0 + jnp.arange(check_every)
+        if backend == "lax":
+            (x, usage, msgs, done), _ = jax.lax.scan(
+                tick, (x, usage, msgs, done), ts
+            )
+        else:
+            from repro.kernels.cell_mixing import cell_mixing
+
+            (m, usage, msgs, done), _ = jax.lax.scan(
+                tick, (eye.astype(x.dtype), usage, msgs, done), ts
+            )
+            x = cell_mixing(m, x, rounds=1, use_pallas=True,
+                            interpret=interpret)
+        ticks = ticks + jnp.where(done, 0, check_every)
+        done = done | (err(x) <= tol)
+        return (x, usage, msgs, done, ticks, t0 + check_every)
+
+    return chunk
+
+
 @partial(
     jax.jit,
-    static_argnames=("max_ticks", "check_every", "loss_p", "backend", "interpret"),
+    static_argnames=("max_ticks", "check_every", "loss_p", "backend",
+                     "schedule", "interpret"),
 )
 def _gossip_loop(
     x0,
@@ -222,12 +287,13 @@ def _gossip_loop(
     check_every: int,
     loss_p: Optional[float],
     backend: str = "lax",
+    schedule: str = "presampled",
     interpret: bool = False,
 ):
     return gossip_core(
         x0, neighbors, degrees, n_nodes, edge_hops, node_mask, eps, key,
         max_ticks=max_ticks, check_every=check_every, loss_p=loss_p,
-        backend=backend, interpret=interpret,
+        backend=backend, schedule=schedule, interpret=interpret,
     )
 
 
@@ -246,6 +312,7 @@ def gossip_until(
     fixed_ticks: Optional[int] = None,
     loss_p: Optional[float] = None,
     backend: str = "lax",
+    schedule: str = "presampled",
     interpret: bool = False,
 ) -> GossipResult:
     """Run batched randomized gossip to eps-accuracy (or `fixed_ticks`).
@@ -255,8 +322,8 @@ def gossip_until(
     convergence oracle.  Convergence is re-checked every `check_every`
     ticks, so up to that many extra exchanges can occur after the true
     crossing (convergence detection is not free in reality either).
-    `backend`/`interpret` select the inner pairwise-average kernel (see
-    module docstring).
+    `backend`/`schedule`/`interpret` select the inner pairwise-average
+    kernel and execution mode (see module docstring).
     """
     x0 = np.asarray(x0)
     if x0.ndim == 2:
@@ -286,6 +353,7 @@ def gossip_until(
         check_every=check,
         loss_p=loss_p,
         backend=backend,
+        schedule=schedule,
         interpret=interpret,
     )
     return GossipResult(

@@ -146,15 +146,20 @@ def multiscale_gossip(
     max_ticks_per_level: int = 2_000_000,
     trials: int = 1,
     backend: str = "lax",
+    schedule: str = "presampled",
+    mesh=None,
     plan: Optional[HierarchyPlan] = None,
 ) -> Union[MultiscaleResult, MultiscaleTrials]:
     """Run multiscale gossip (Alg. 1); see module docstring.
 
     With `trials=T` all T trials execute in one compiled vmapped call
-    (seeds `seed .. seed+T-1`) and a `MultiscaleTrials` is returned.
+    (seeds `seed .. seed+T-1`) and a `MultiscaleTrials` is returned;
+    `mesh=` (1-axis device mesh) shards that trial axis over devices.
     Pass `plan=` to reuse a prebuilt `HierarchyPlan` (then `k`, `a`,
     `cell_max`, `rep_mode` are taken from the plan and `seed` only
-    drives the gossip randomness).
+    drives the gossip randomness).  `backend`/`schedule` select the
+    inner gossip kernel and presampled-vs-legacy execution (see
+    `core.gossip`).
     """
     if plan is None:
         plan = build_plan(
@@ -166,6 +171,7 @@ def multiscale_gossip(
         plan, x0, eps=eps, seeds=seeds, weighted=weighted,
         fixed_ticks_scale=fixed_ticks_scale, loss_p=loss_p,
         max_ticks_per_level=max_ticks_per_level, backend=backend,
+        schedule=schedule, mesh=mesh,
     )
     reports = _level_reports(plan, res, n)
     if trials == 1:

@@ -1,0 +1,180 @@
+"""Presampled exchange schedules for randomized gossip.
+
+Every exchange decision in the asynchronous gossip model — which node
+wakes, which neighbor it draws, whether each hop of the request/reply
+survives, what the exchange costs — depends only on ``(key, t)``, never
+on the node values; only the pair-average recursion itself is
+sequential.  (Boyd et al. [2] and the paper's §VII fixed-iterations
+analysis both treat the exchange sequence as an i.i.d. schedule for
+exactly this reason.)  This module exploits that split:
+
+* `sample_tick` is the sampling half of one legacy gossip tick — the
+  exact ops, in the exact order, of the historical per-tick scan body,
+  so its draws are bitwise-reproducible against the legacy path;
+* `sample_schedule` vmaps it over a whole `check_every` chunk of tick
+  indices: one batched RNG pass produces the full ``(T, B)`` schedule
+  (waking node, neighbor slot, partner, per-hop loss outcomes, hop
+  cost) at once.  `jax.vmap` does not change threefry's per-key
+  streams, so the presampled schedule is bit-identical to T sequential
+  `sample_tick` calls;
+* `compose_schedule` turns a presampled pair list into the chunk's
+  ``(B, C, C)`` mixing matrix with a log2(T) tree of batched matmuls
+  (MXU-friendly), replacing the historical eye-rebuild-then-scan.
+  Matrix composition reassociates the f32 sums, so values produced
+  through it agree with the sequential recursion only up to f32
+  rounding — integer accounting (usage, cost) is schedule-only and
+  stays exact.
+
+The value half — applying the presampled pair list to ``(B, C, V)``
+cell state — lives in `repro.kernels.pair_apply` (jnp oracle + Pallas
+TPU kernel that walks the schedule in VMEM).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "ExchangeSchedule",
+    "sample_tick",
+    "sample_schedule",
+    "compose_schedule",
+]
+
+
+class ExchangeSchedule(NamedTuple):
+    """Value-independent draws for a block of gossip ticks.
+
+    Leading axis is the tick index within the chunk (absent for a
+    single `sample_tick`); all fields are per-graph ``(…, B)``.
+    `valid` excludes the per-chunk `done` freeze, which is the caller's
+    to apply (it is constant within a chunk): ``active = valid & ~done``.
+    """
+
+    i: jax.Array       # waking node
+    jidx: jax.Array    # neighbor slot drawn at i
+    j: jax.Array       # contacted node, clipped to >= 0 (see `valid`)
+    valid: jax.Array   # bool: i has neighbors and the slot is real
+    fwd_ok: jax.Array  # bool: request delivered over every hop
+    rep_ok: jax.Array  # bool: reply delivered over every hop
+    cost: jax.Array    # int32 single-hop transmissions if the tick is active
+
+
+def truncated_failure_hops(u, p, h):
+    """Hops transmitted for a message over h hops with per-hop success p.
+
+    Successes before first failure: S = floor(log u / log p); delivered
+    iff S >= h (transmits h); else transmits S + 1.  Returns
+    (delivered, hops_transmitted).
+    """
+    s = jnp.where(p < 1.0, jnp.floor(jnp.log(u) / jnp.log(jnp.maximum(p, 1e-12))), jnp.inf)
+    delivered = s >= h
+    return delivered, jnp.where(delivered, h, s + 1.0).astype(jnp.int32)
+
+
+def sample_tick(
+    t,
+    key,
+    neighbors,
+    degrees,
+    n_nodes,
+    edge_hops,
+    loss_p: Optional[float],
+    dtype=jnp.float32,
+) -> ExchangeSchedule:
+    """Draw one tick's exchange decisions for all B graphs.
+
+    This is the sampling half of the legacy per-tick scan body — ops
+    and RNG consumption order are kept identical so the presampled and
+    per-tick paths are bitwise-interchangeable.
+    """
+    B, C, D = neighbors.shape
+    bidx = jnp.arange(B)
+    kt = jax.random.fold_in(key, t)
+    ki, kj, kf, kr = jax.random.split(kt, 4)
+    # pick a waking node per graph (uniform over live nodes)
+    u = jax.random.uniform(ki, (B,))
+    i = jnp.minimum((u * n_nodes).astype(jnp.int32), n_nodes - 1)
+    deg_i = jnp.take_along_axis(degrees, i[:, None], axis=1)[:, 0]
+    v = jax.random.uniform(kj, (B,))
+    jidx = jnp.minimum((v * deg_i).astype(jnp.int32), jnp.maximum(deg_i - 1, 0))
+    j = neighbors[bidx, i, jidx]
+    valid = (deg_i > 0) & (j >= 0)
+    hops = edge_hops[bidx, i, jidx]
+
+    if loss_p is None:
+        fwd_ok = jnp.ones((B,), bool)
+        rep_ok = jnp.ones((B,), bool)
+        cost = 2 * hops
+    else:
+        p = jnp.asarray(loss_p, dtype)
+        fwd_ok, fwd_hops = truncated_failure_hops(
+            jax.random.uniform(kf, (B,)), p, hops
+        )
+        rep_ok, rep_hops = truncated_failure_hops(
+            jax.random.uniform(kr, (B,)), p, hops
+        )
+        cost = fwd_hops + jnp.where(fwd_ok, rep_hops, 0)
+    return ExchangeSchedule(
+        i=i, jidx=jidx, j=jnp.maximum(j, 0), valid=valid,
+        fwd_ok=fwd_ok, rep_ok=rep_ok, cost=cost,
+    )
+
+
+def sample_schedule(
+    ts,
+    key,
+    neighbors,
+    degrees,
+    n_nodes,
+    edge_hops,
+    loss_p: Optional[float],
+    dtype=jnp.float32,
+) -> ExchangeSchedule:
+    """Presample a whole chunk: one batched RNG pass over tick indices
+    `ts` producing an `ExchangeSchedule` with leading axis len(ts)."""
+
+    def one(t):
+        return sample_tick(
+            t, key, neighbors, degrees, n_nodes, edge_hops, loss_p, dtype
+        )
+
+    return jax.vmap(one)(ts)
+
+
+def compose_schedule(num_slots: int, i, j, upd_i, upd_j, dtype=jnp.float32):
+    """Compose a presampled pair list into one (B, C, C) mixing matrix.
+
+    Tick t's elementary matrix E_t is the identity with rows i_t / j_t
+    replaced by the pair average 0.5 (e_i + e_j) where the respective
+    update fires (the same conditional row updates the per-tick scan
+    applies to x).  The chunk matrix E_T @ … @ E_1 is folded with a
+    log2(T) tree of batched matmuls — each round one (T/2, B, C, C)
+    batched GEMM, MXU work instead of T sequential row scatters.
+
+    Memory: materializes (T, B, C, C); intended for the small per-cell
+    matrices of the simulation hierarchy (C up to a few dozen).
+    """
+    T, B = i.shape
+    C = num_slots
+    eye = jnp.eye(C, dtype=dtype)
+    e_i = eye[i]                       # (T, B, C) one-hot rows
+    e_j = eye[j]
+    avg = 0.5 * (e_i + e_j)
+    rows_i = jnp.where(upd_i[..., None], avg, e_i)
+    rows_j = jnp.where(upd_j[..., None], avg, e_j)
+    tidx = jnp.arange(T)[:, None]
+    bidx = jnp.arange(B)[None, :]
+    E = jnp.broadcast_to(eye, (T, B, C, C))
+    # same write order as the scan: partner row, then initiator row
+    E = E.at[tidx, bidx, j].set(rows_j)
+    E = E.at[tidx, bidx, i].set(rows_i)
+    P = 1 << max(T - 1, 0).bit_length()
+    if P != T:
+        E = jnp.concatenate([E, jnp.broadcast_to(eye, (P - T, B, C, C))], 0)
+    while E.shape[0] > 1:
+        # fold adjacent pairs: later-tick matrix multiplies from the left
+        E = jnp.einsum("tbij,tbjk->tbik", E[1::2], E[0::2])
+    return E[0]

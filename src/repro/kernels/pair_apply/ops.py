@@ -1,0 +1,57 @@
+"""Public op for applying presampled gossip schedules: alignment
+padding, schedule layout, and the Pallas-vs-oracle dispatch.
+
+`use_pallas=False` (or any non-TPU engine run) takes the jnp oracle —
+the same scan the lax backend uses, bitwise-identical to the kernel's
+f32 op sequence, so backend choice never changes simulation results.
+The Pallas kernel itself is validated in interpret mode by the kernel
+tests and runs for real only on TPU hosts.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import pair_apply_pallas
+from .ref import pair_apply_ref
+
+__all__ = ["pair_apply"]
+
+
+def _round_up(v: int, mult: int) -> int:
+    return ((v + mult - 1) // mult) * mult
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def pair_apply(
+    x: jax.Array,
+    i: jax.Array,
+    j: jax.Array,
+    upd_i: jax.Array,
+    upd_j: jax.Array,
+    *,
+    use_pallas: bool = True,
+    interpret: bool = False,
+) -> jax.Array:
+    """Walk a (T, B) presampled exchange schedule over (B, C, V) state.
+
+    See `ref.pair_apply_ref` for argument semantics.  Inputs may be
+    unaligned; the Pallas path pads C to 8 sublanes / V to 128 lanes,
+    transposes the schedule to graph-major SMEM layout, and crops the
+    result back.
+    """
+    if not use_pallas:
+        return pair_apply_ref(x, i, j, upd_i, upd_j)
+    B, C, V = x.shape
+    Cp, Vp = _round_up(C, 8), _round_up(V, 128)
+    xp = jnp.pad(x, ((0, 0), (0, Cp - C), (0, Vp - V)))
+    sched = (
+        i.T.astype(jnp.int32),
+        j.T.astype(jnp.int32),
+        upd_i.T.astype(jnp.int32),
+        upd_j.T.astype(jnp.int32),
+    )
+    y = pair_apply_pallas(xp, *sched, interpret=interpret)
+    return y[:, :C, :V]

@@ -34,6 +34,8 @@ SLOW_FILES = {"test_dist_multidevice.py"}
 SLOW_TESTS = {
     "test_trials_vmap_matches_sequential",
     "test_pallas_backend_matches_lax",
+    "test_engine_matmul_backend",
+    "test_engine_single_device_mesh_matches_unsharded",
 }
 
 

@@ -1,0 +1,254 @@
+"""Presampled-schedule parity vs the legacy per-tick scan.
+
+The schedule/value split must be invisible to the simulation: the lax
+and pallas backends are BITWISE-identical to the legacy sequential scan
+(x, edge_usage, messages, ticks — including the `loss_p` failure path),
+and the matmul backend keeps the integer accounting bitwise while its
+values agree up to f32 rounding (matrix composition reassociates the
+pair-average sums; same caveat the historical pallas branch carried).
+"""
+import numpy as np
+import pytest
+
+from repro.core import (
+    batched_graphs,
+    build_plan,
+    compose_schedule,
+    execute_plan,
+    gossip_until,
+    multiscale_gossip,
+    random_geometric_graph,
+    sample_schedule,
+    sample_tick,
+)
+from repro.kernels.pair_apply import pair_apply, pair_apply_ref
+
+
+def _ring(n):
+    class G:
+        pass
+
+    g = G()
+    g.n = n
+    g.max_deg = 2
+    g.neighbors = np.stack(
+        [(np.arange(n) - 1) % n, (np.arange(n) + 1) % n], axis=1
+    ).astype(np.int32)
+    g.degrees = np.full(n, 2, np.int32)
+    return g
+
+
+def _gossip_args(n=48, seed=0):
+    g = _ring(n)
+    x0 = np.random.default_rng(seed).normal(0, 1, n).astype(np.float32)[None]
+    return (x0, g.neighbors[None], g.degrees[None], np.array([n], np.int32))
+
+
+def _assert_int_parity(a, b):
+    np.testing.assert_array_equal(a.edge_usage, b.edge_usage)
+    np.testing.assert_array_equal(a.messages, b.messages)
+    np.testing.assert_array_equal(a.ticks, b.ticks)
+    np.testing.assert_array_equal(a.converged, b.converged)
+
+
+# ------------------------ gossip-loop parity ---------------------------
+
+
+@pytest.mark.parametrize("backend", ["lax", "pallas"])
+def test_presampled_bitwise_eps_oracle(backend):
+    args = _gossip_args(seed=1)
+    legacy = gossip_until(*args, eps=1e-4, seed=3, schedule="per_tick")
+    new = gossip_until(
+        *args, eps=1e-4, seed=3, schedule="presampled", backend=backend,
+        interpret=True,
+    )
+    np.testing.assert_array_equal(legacy.x, new.x)
+    _assert_int_parity(legacy, new)
+
+
+@pytest.mark.parametrize("backend", ["lax", "pallas", "matmul"])
+def test_presampled_parity_fixed_ticks_loss(backend):
+    """The paper's failure path: fixed budget, per-hop loss.  All
+    accounting is schedule-only, so it is bitwise for every backend;
+    values are bitwise for lax/pallas and allclose for matmul."""
+    args = _gossip_args(seed=2)
+    kw = dict(eps=-1.0, seed=7, fixed_ticks=384, loss_p=0.8)
+    legacy = gossip_until(*args, schedule="per_tick", **kw)
+    new = gossip_until(
+        *args, schedule="presampled", backend=backend, interpret=True, **kw
+    )
+    _assert_int_parity(legacy, new)
+    if backend == "matmul":
+        np.testing.assert_allclose(legacy.x, new.x, rtol=2e-5, atol=2e-6)
+    else:
+        np.testing.assert_array_equal(legacy.x, new.x)
+
+
+def test_presampled_parity_batched_weighted():
+    gs = [_ring(8), _ring(24), _ring(40)]
+    neighbors, degrees, n_nodes, mask = batched_graphs(gs)
+    rng = np.random.default_rng(5)
+    x = np.where(mask, rng.normal(0, 1, mask.shape), 0.0)
+    w = np.where(mask, rng.uniform(0.5, 2.0, mask.shape), 0.0)
+    x0 = np.stack([x * w, w], axis=-1).astype(np.float32)
+    legacy = gossip_until(
+        x0, neighbors, degrees, n_nodes, eps=1e-4, seed=9,
+        schedule="per_tick",
+    )
+    new = gossip_until(x0, neighbors, degrees, n_nodes, eps=1e-4, seed=9)
+    np.testing.assert_array_equal(legacy.x, new.x)
+    _assert_int_parity(legacy, new)
+
+
+def test_per_tick_pallas_matches_lax_accounting():
+    """The kept legacy pallas branch (eye hoisted out of the chunk
+    body) must still produce the identical exchange sequence."""
+    args = _gossip_args(seed=3)
+    a = gossip_until(*args, eps=1e-3, seed=11, schedule="per_tick")
+    b = gossip_until(
+        *args, eps=1e-3, seed=11, schedule="per_tick", backend="pallas",
+        interpret=True,
+    )
+    _assert_int_parity(a, b)
+    np.testing.assert_allclose(a.x, b.x, rtol=1e-4, atol=1e-5)
+
+
+def test_schedule_mode_validation():
+    args = _gossip_args()
+    with pytest.raises(ValueError):
+        gossip_until(*args, eps=1e-3, schedule="clairvoyant")
+    with pytest.raises(ValueError):
+        gossip_until(*args, eps=1e-3, schedule="per_tick", backend="matmul")
+
+
+# -------------------------- schedule pass ------------------------------
+
+
+def test_sample_schedule_matches_sample_tick():
+    import jax
+    import jax.numpy as jnp
+
+    g = _ring(16)
+    key = jax.random.PRNGKey(4)
+    nb = jnp.asarray(g.neighbors[None])
+    dg = jnp.asarray(g.degrees[None])
+    nn = jnp.asarray([16], jnp.int32)
+    eh = jnp.ones((1, 16, 2), jnp.int32)
+    ts = jnp.arange(10, 42)
+    sched = sample_schedule(ts, key, nb, dg, nn, eh, 0.7)
+    for idx, t in enumerate(np.asarray(ts)):
+        one = sample_tick(jnp.int32(t), key, nb, dg, nn, eh, 0.7)
+        for field, batch in zip(one._fields, sched):
+            np.testing.assert_array_equal(
+                np.asarray(batch[idx]), np.asarray(getattr(one, field)),
+                err_msg=f"t={t} field={field}",
+            )
+
+
+def test_compose_schedule_is_stochastic_and_matches_ref():
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(6)
+    T, B, C, V = 48, 3, 12, 2
+    i = jnp.asarray(rng.integers(0, C, (T, B)), jnp.int32)
+    j = jnp.asarray((rng.integers(1, C, (T, B)) + np.asarray(i)) % C,
+                    jnp.int32)
+    ui = jnp.asarray(rng.uniform(size=(T, B)) < 0.8)
+    uj = jnp.asarray(rng.uniform(size=(T, B)) < 0.9)
+    m = compose_schedule(C, i, j, ui, uj)
+    # each elementary matrix is row-stochastic, so the composition is too
+    np.testing.assert_allclose(np.asarray(m).sum(-1), 1.0, atol=1e-5)
+    x = jnp.asarray(rng.normal(size=(B, C, V)), jnp.float32)
+    want = pair_apply_ref(x, i, j, ui, uj)
+    got = jnp.einsum("bij,bjv->biv", m, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-6)
+
+
+# ------------------------- pair_apply kernel ---------------------------
+
+
+@pytest.mark.parametrize("B,C,V,T", [(1, 8, 1, 16), (3, 13, 2, 64)])
+def test_pair_apply_kernel_bitwise_vs_oracle(B, C, V, T):
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(B * T)
+    x = jnp.asarray(rng.normal(size=(B, C, V)), jnp.float32)
+    i = jnp.asarray(rng.integers(0, C, (T, B)), jnp.int32)
+    j = jnp.asarray(rng.integers(0, C, (T, B)), jnp.int32)
+    ui = jnp.asarray(rng.uniform(size=(T, B)) < 0.8)
+    uj = jnp.asarray(rng.uniform(size=(T, B)) < 0.9)
+    want = pair_apply_ref(x, i, j, ui, uj)
+    got = pair_apply(x, i, j, ui, uj, use_pallas=True, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_pair_apply_noop_when_masked():
+    import jax.numpy as jnp
+
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(2, 9, 1)),
+                    jnp.float32)
+    i = jnp.zeros((12, 2), jnp.int32)
+    off = jnp.zeros((12, 2), bool)
+    got = pair_apply_ref(x, i, i, off, off)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(x))
+
+
+# --------------------------- engine parity -----------------------------
+
+
+def test_engine_presampled_matches_per_tick():
+    g = random_geometric_graph(120, seed=5)
+    x0 = np.random.default_rng(2).normal(0, 1, 120)
+    plan = build_plan(g, seed=0)
+    legacy = execute_plan(
+        plan, x0, eps=1e-4, seeds=(0,), weighted=True, schedule="per_tick"
+    )
+    new = execute_plan(plan, x0, eps=1e-4, seeds=(0,), weighted=True)
+    np.testing.assert_array_equal(legacy.x_final, new.x_final)
+    np.testing.assert_array_equal(legacy.messages, new.messages)
+    np.testing.assert_array_equal(legacy.node_sends, new.node_sends)
+    np.testing.assert_array_equal(legacy.level_ticks, new.level_ticks)
+
+
+def test_engine_matmul_backend():
+    g = random_geometric_graph(100, seed=6)
+    x0 = np.random.default_rng(3).normal(0, 1, 100)
+    plan = build_plan(g, seed=0)
+    a = multiscale_gossip(
+        g, x0, eps=1e-4, seed=0, weighted=True, plan=plan, backend="lax"
+    )
+    b = multiscale_gossip(
+        g, x0, eps=1e-4, seed=0, weighted=True, plan=plan, backend="matmul"
+    )
+    assert a.messages == b.messages
+    np.testing.assert_array_equal(a.node_sends, b.node_sends)
+    np.testing.assert_allclose(a.x_final, b.x_final, atol=2e-4, rtol=1e-4)
+
+
+def test_engine_single_device_mesh_matches_unsharded():
+    import jax
+    from jax.sharding import Mesh
+
+    g = random_geometric_graph(90, seed=7)
+    x0 = np.random.default_rng(4).normal(0, 1, 90)
+    plan = build_plan(g, seed=0)
+    mesh = Mesh(np.array(jax.devices()), ("trials",))
+    sharded = execute_plan(
+        plan, x0, eps=1e-4, seeds=(0, 1, 2), weighted=True, mesh=mesh
+    )
+    dense = execute_plan(plan, x0, eps=1e-4, seeds=(0, 1, 2), weighted=True)
+    np.testing.assert_array_equal(sharded.x_final, dense.x_final)
+    np.testing.assert_array_equal(sharded.messages, dense.messages)
+    np.testing.assert_array_equal(sharded.node_sends, dense.node_sends)
+
+
+def test_engine_mesh_rejects_multi_axis():
+    import jax
+    from jax.sharding import Mesh
+
+    g = random_geometric_graph(30, seed=8)
+    plan = build_plan(g, seed=0)
+    mesh = Mesh(np.array(jax.devices()).reshape(1, 1), ("a", "b"))
+    with pytest.raises(ValueError):
+        execute_plan(plan, np.zeros(30), seeds=(0,), mesh=mesh)

@@ -5,18 +5,25 @@ Re-runs the fig2 smoke (same n / eps / seeds as the committed run —
 the benchmark is deterministic, so honest drift comes from algorithm
 changes, not noise) and compares per-level-count message means against
 `benchmarks/artifacts/fig2_levels.json` within a relative tolerance.
-Artifact drift then fails CI loudly instead of being silently committed
-the next time someone regenerates the artifacts.
+The same gate then covers the fig3 smoke: each backend-suffixed
+committed artifact (`fig3_smoke_lax`, `fig3_smoke_pallas`) is re-run at
+its recorded n / eps / trials and the per-algorithm message means are
+compared within the same tolerance (wall-clocks are machine-dependent
+and NOT gated).  Artifact drift then fails CI loudly instead of being
+silently committed the next time someone regenerates the artifacts.
 
-The fresh run is written to a scratch artifact (`fig2_levels_check`) so
-the committed file is never clobbered by a drifting run — regenerating
-the committed artifact on purpose stays an explicit
-`python -m benchmarks.run --only fig2`.
+Fresh runs are written to scratch artifacts (`*_check`) so the
+committed files are never clobbered by a drifting run — regenerating a
+committed artifact on purpose stays an explicit
+`python -m benchmarks.run --only fig2` / `REPRO_BENCH_SMOKE=1
+tools/ci.sh`.
 
     python tools/check_artifacts.py [--tolerance 0.15] [--trials N]
+                                    [--skip-fig3]
 
 Exit status: 0 when every row is within tolerance, 1 on drift or a
-missing committed artifact.  Wired into tools/ci.sh as the fig2 smoke.
+missing committed artifact.  Wired into tools/ci.sh as the benchmark
+smoke gate.
 """
 from __future__ import annotations
 
@@ -29,6 +36,57 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 COMMITTED = "fig2_levels"
 SCRATCH = "fig2_levels_check"
+FIG3_BACKENDS = ("lax", "pallas")
+
+
+def check_fig3(tolerance: float) -> list[str]:
+    """Gate the backend-suffixed fig3 smoke message counts."""
+    from benchmarks import fig3_vs_path_averaging
+    from benchmarks.common import load_artifact
+
+    failures = []
+    for backend in FIG3_BACKENDS:
+        name = f"fig3_smoke_{backend}"
+        committed = load_artifact(name)
+        if committed is None:
+            failures.append(
+                f"  {name}: committed artifact benchmarks/artifacts/"
+                f"{name}.json is missing; run REPRO_BENCH_SMOKE=1 "
+                f"tools/ci.sh and commit the result")
+            continue
+        sizes = tuple(sorted({
+            int(n) for rows in committed["summary"].values() for n in rows
+        }))
+        print(f"check_artifacts: re-running fig3 smoke (backend={backend}, "
+              f"sizes={sizes}, trials={committed['trials']}, "
+              f"eps={committed['eps']}) against {name} "
+              f"(tolerance ±{tolerance:.0%})")
+        fig3_vs_path_averaging.run(
+            sizes=sizes, trials=int(committed["trials"]),
+            eps=float(committed["eps"]), backend=backend,
+            artifact=f"{name}_check",
+        )
+        fresh = load_artifact(f"{name}_check")
+        for algo, rows in committed["summary"].items():
+            for n, rec in rows.items():
+                want = float(rec["messages_mean"])
+                got_rec = fresh["summary"].get(algo, {}).get(
+                    n, fresh["summary"].get(algo, {}).get(str(n)))
+                if got_rec is None:
+                    failures.append(
+                        f"  {name} {algo}@n{n}: missing from the fresh run")
+                    continue
+                got = float(got_rec["messages_mean"])
+                rel = abs(got - want) / max(want, 1.0)
+                status = "ok" if rel <= tolerance else "DRIFT"
+                print(f"  {backend}/{algo}@n{n}: committed={want:.0f} "
+                      f"fresh={got:.0f} rel={rel:+.1%} [{status}]")
+                if rel > tolerance:
+                    failures.append(
+                        f"  {name} {algo}@n{n}: messages_mean drifted "
+                        f"{rel:.1%} (committed {want:.0f} -> fresh {got:.0f},"
+                        f" tolerance {tolerance:.0%})")
+    return failures
 
 
 def main() -> int:
@@ -38,6 +96,8 @@ def main() -> int:
     ap.add_argument("--trials", type=int, default=None,
                     help="override trial count of the fresh run (defaults "
                          "to 3, the committed profile)")
+    ap.add_argument("--skip-fig3", action="store_true",
+                    help="gate only the fig2 artifact")
     args = ap.parse_args()
 
     from benchmarks import fig2_levels
@@ -81,15 +141,20 @@ def main() -> int:
                 f"tolerance {args.tolerance:.0%})"
             )
 
+    if not args.skip_fig3:
+        failures += check_fig3(args.tolerance)
+
     if failures:
         print("check_artifacts: FAIL — per-algorithm message counts drifted "
-              "from the committed artifact:")
+              "from the committed artifacts:")
         print("\n".join(failures))
         print("If the drift is intentional (algorithm change), regenerate "
-              "and commit the artifact: python -m benchmarks.run --only fig2")
+              "and commit the artifacts: python -m benchmarks.run --only "
+              "fig2 and REPRO_BENCH_SMOKE=1 tools/ci.sh for the fig3 smokes")
         return 1
-    print("check_artifacts: OK — fig2 message counts within "
-          f"±{args.tolerance:.0%} of the committed artifact")
+    gated = "fig2" if args.skip_fig3 else "fig2 + fig3 smoke"
+    print(f"check_artifacts: OK — {gated} message counts within "
+          f"±{args.tolerance:.0%} of the committed artifacts")
     return 0
 
 

@@ -2,10 +2,11 @@
 # CI entry point: tier-1 test suite + a fast benchmark smoke gated by the
 # artifact-regression check.
 #
-#   tools/ci.sh                     # tier-1 (-m "not slow") + fig2 smoke
-#                                   #   through tools/check_artifacts.py
-#                                   #   (±15% message-count gate vs the
-#                                   #   committed artifact)
+#   tools/ci.sh                     # tier-1 (-m "not slow") + fig2/fig3
+#                                   #   smokes through
+#                                   #   tools/check_artifacts.py (±15%
+#                                   #   message-count gate vs the
+#                                   #   committed artifacts)
 #   tools/ci.sh --no-bench          # tests only
 #   tools/ci.sh --bench-only        # gate + smokes only (CI job 2: the
 #                                   #   tier1 job already ran the tests)
@@ -14,7 +15,9 @@
 #                                   #   backends — backend-suffixed
 #                                   #   artifacts so the pallas run does
 #                                   #   not clobber the lax run's
-#                                   #   wall-clock/backend record)
+#                                   #   wall-clock/backend record), then
+#                                   #   an entry appended to the
+#                                   #   BENCH_gossip.json perf trajectory
 #                                   # + compressed decentralized-train smoke
 #                                   #   (2 steps, topk+rotation, multiscale,
 #                                   #   R=8) and an async-overlap train
@@ -37,7 +40,7 @@ if [[ "${1:-}" != "--bench-only" ]]; then
 fi
 
 if [[ "${1:-}" != "--no-bench" ]]; then
-    echo "== benchmark smoke + artifact-regression gate (fig2) =="
+    echo "== benchmark smoke + artifact-regression gate (fig2 + fig3) =="
     python tools/check_artifacts.py
 fi
 
@@ -50,6 +53,8 @@ if [[ "${REPRO_BENCH_SMOKE:-0}" == "1" ]]; then
     echo "== benchmark smoke (fig3 n=500 trials=1, backend=pallas) =="
     python -m benchmarks.fig3_vs_path_averaging --sizes 500 --trials 1 \
         --backend pallas --artifact fig3_smoke_pallas
+    echo "== gossip perf trajectory (BENCH_gossip.json) =="
+    python -m benchmarks.gossip_trajectory --label "ci smoke"
     echo "== compressed decentralized-train smoke (R=8, topk, multiscale) =="
     python examples/decentralized_consensus.py --strategy multiscale \
         --compress topk --rotate 4 --replicas 8 --steps 2
