@@ -26,7 +26,8 @@ def main() -> None:
 
     from . import (
         fig2_levels, fig3_vs_path_averaging, fig4_cdf, fig5_failures,
-        gossip_trajectory, kernel_bench, roofline, table1_node_utilization,
+        gossip_trajectory, kernel_bench, roofline, serve_bench,
+        table1_node_utilization,
     )
 
     suites = {
@@ -46,6 +47,7 @@ def main() -> None:
         "sync": lambda: _subprocess_lines("benchmarks.sync_collectives"),
         "roofline": roofline.run,
         "gossip": gossip_trajectory.run,
+        "serve": serve_bench.run,
     }
     if args.only:
         keep = set(args.only.split(","))

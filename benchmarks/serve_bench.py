@@ -1,0 +1,170 @@
+"""BENCH_serve.json — the serving-fleet perf-trajectory artifact.
+
+Every entry snapshots the serving stack at one commit:
+
+* **fleet** — the gossip-coordinated fleet simulation (`serve.fleet`)
+  run once per router on a fixed seed: tokens/tick, completed requests,
+  admission latency, and the control plane's message/byte bill, plus
+  the headline `p2c_over_oracle` throughput ratio (the decentralized-
+  routing acceptance number);
+* **model_decode** — the real paged decode path (`ModelBackend` over a
+  reduced llama config): steady-state live tok/s through the
+  continuous-batching engine and `jit_warmup_s` for the two compiled
+  entry points, so compile-time regressions are visible separately from
+  throughput ones.
+
+Same trajectory discipline as BENCH_gossip.json: repo-root, append-only
+keyed by (commit, label), dirty trees stamped `-dirty`.
+
+    python -m benchmarks.serve_bench [--label msg] [--no-model]
+
+Also exposed as the `serve` suite in `benchmarks.run`;
+`REPRO_BENCH_SMOKE=1 tools/ci.sh` appends an entry per CI run.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+from .common import csv_line
+from .gossip_trajectory import _git_commit
+
+TRAJECTORY = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "BENCH_serve.json",
+)
+
+FLEET = dict(replicas=16, ticks=120, seed=0)
+
+
+def load_trajectory() -> list:
+    if not os.path.exists(TRAJECTORY):
+        return []
+    return json.load(open(TRAJECTORY))
+
+
+def record_entry(entry: dict) -> None:
+    key = (entry["commit"], entry.get("label", ""))
+    traj = [
+        e for e in load_trajectory()
+        if (e.get("commit"), e.get("label", "")) != key
+    ]
+    traj.append(entry)
+    with open(TRAJECTORY, "w") as f:
+        json.dump(traj, f, indent=1)
+
+
+def fleet_bench() -> dict:
+    from repro.serve import ROUTERS, FleetConfig, run_fleet
+
+    out = {}
+    for router in ROUTERS:
+        cfg = FleetConfig(router=router, **FLEET)
+        r = run_fleet(cfg)
+        out[router] = {
+            "throughput_tok_per_tick": r.throughput,
+            "completed": r.completed,
+            "admission_latency_mean": r.admission_latency_mean,
+            "page_utilization_mean": r.page_utilization_mean,
+            "control_rounds": r.control_rounds,
+            "control_messages": r.control_messages,
+            "control_bytes": r.control_bytes,
+            "bytes_per_round": r.bytes_per_round,
+        }
+    out["p2c_over_oracle"] = (
+        out["p2c_gossip"]["throughput_tok_per_tick"]
+        / max(out["oracle"]["throughput_tok_per_tick"], 1e-9)
+    )
+    out.update(FLEET)
+    return out
+
+
+def model_decode_bench(decode_steps: int = 24) -> dict:
+    """Steady-state paged decode tok/s on the reduced llama config."""
+    import jax
+    import numpy as np
+
+    from repro.configs import get_config, reduce_config
+    from repro.models import Transformer
+    from repro.serve import BatchingEngine, ModelBackend, PageTable
+
+    cfg = reduce_config(get_config("llama3.2-3b"))
+    params = Transformer(cfg, model_axis=1).init(jax.random.PRNGKey(0))
+    S, ps, P = 4, 4, 8
+    table = PageTable(num_pages=S * P, page_size=ps, num_slots=S,
+                      pages_per_slot=P)
+    backend = ModelBackend(cfg, params, num_slots=S, num_pages=S * P,
+                           page_size=ps, max_prompt_len=8)
+    warmup_s = backend.warmup(table)
+    eng = BatchingEngine(backend, table, eos_id=-1, seed=0)
+    prompts = np.random.default_rng(0).integers(
+        2, cfg.vocab_size, (S, 4)
+    ).astype(np.int32)
+    for b in range(S):
+        eng.submit(prompts[b], decode_steps)
+    t0 = time.perf_counter()
+    eng.run()
+    wall = time.perf_counter() - t0
+    return {
+        "arch": cfg.name,
+        "slots": S,
+        "decode_steps": decode_steps,
+        "jit_warmup_s": warmup_s,
+        "wall_clock_s": wall,
+        "tok_s": eng.tokens_generated / wall,
+    }
+
+
+def build_entry(label: str = "", model: bool = True) -> dict:
+    entry = {
+        "commit": _git_commit(),
+        "unix_time": int(time.time()),
+        "label": label,
+        "fleet": fleet_bench(),
+    }
+    if model:
+        entry["model_decode"] = model_decode_bench()
+    return entry
+
+
+def run(label: str = "", model: bool = True) -> list[str]:
+    entry = build_entry(label=label, model=model)
+    record_entry(entry)
+    fl = entry["fleet"]
+    lines = []
+    for router in ("p2c_gossip", "oracle", "random"):
+        r = fl[router]
+        lines.append(csv_line(
+            f"serve/fleet_{router}", 0.0,
+            f"tok_per_tick={r['throughput_tok_per_tick']:.1f} "
+            f"done={r['completed']} "
+            f"ctrl_bytes={r['control_bytes']}",
+        ))
+    lines.append(csv_line(
+        "serve/p2c_over_oracle", 0.0, f"{fl['p2c_over_oracle']:.3f}"
+    ))
+    if "model_decode" in entry:
+        md = entry["model_decode"]
+        lines.append(csv_line(
+            "serve/paged_decode", md["wall_clock_s"] * 1e6,
+            f"{md['arch']} tok_s={md['tok_s']:.0f} "
+            f"jit_warmup_s={md['jit_warmup_s']:.2f}",
+        ))
+    lines.append(csv_line(
+        "serve/trajectory", 0.0,
+        f"entries={len(load_trajectory())} -> BENCH_serve.json "
+        f"commit={entry['commit']}",
+    ))
+    return lines
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--label", default="")
+    ap.add_argument("--no-model", action="store_true")
+    args = ap.parse_args()
+    for line in run(label=args.label, model=not args.no_model):
+        print(line)

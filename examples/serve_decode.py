@@ -37,11 +37,19 @@ def main() -> None:
     prompts = np.random.default_rng(1).integers(
         2, cfg.vocab_size, (args.batch, 8)
     ).astype(np.int32)
+    # first generate compiles prefill + decode; report it separately so
+    # steady-state tok/s excludes XLA compile time
+    t0 = time.time()
+    gen.generate(prompts, steps=1, seed=0, frames=frames)
+    jit_warmup_s = time.time() - t0
     t0 = time.time()
     out = gen.generate(prompts, steps=args.steps, seed=0, frames=frames)
     dt = time.time() - t0
+    live = gen.last_stats["live_tokens"]
+    print(f"jit_warmup_s: {jit_warmup_s:.2f}")
     print(f"generated {out.shape} tokens in {dt:.2f}s "
-          f"({out.size / dt:.0f} tok/s batched)")
+          f"({live / dt:.0f} live tok/s batched, "
+          f"{live}/{out.size} live)")
     print("sample token ids:", out[0][:16].tolist())
 
 

@@ -1,5 +1,13 @@
 from .config import ModelConfig
-from .model import Transformer, decode_step, forward, init_cache, loss_fn
+from .model import (
+    Transformer,
+    decode_step,
+    forward,
+    init_cache,
+    init_paged_cache,
+    loss_fn,
+    paged_decode_step,
+)
 
 __all__ = [
     "ModelConfig",
@@ -7,5 +15,7 @@ __all__ = [
     "decode_step",
     "forward",
     "init_cache",
+    "init_paged_cache",
     "loss_fn",
+    "paged_decode_step",
 ]

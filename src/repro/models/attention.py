@@ -40,7 +40,7 @@ def _constrain_heads(x, dp):
 
 __all__ = [
     "attn_params", "attention", "decode_attention", "chunked_attention",
-    "init_kv_cache",
+    "init_kv_cache", "init_paged_kv_cache", "paged_decode_attention",
 ]
 
 _NEG_INF = -1e30
@@ -354,3 +354,89 @@ def decode_attention(
                        scale=_scale(cfg))
     out = dense(_unheads(o), params["wo"])
     return out, {"k": k, "v": v, "pos": pos}
+
+
+# --------------------------- paged decode ------------------------------
+
+
+def init_paged_kv_cache(
+    cfg: ModelConfig, num_pages: int, page_size: int
+) -> dict:
+    """Page-pool KV cache for one attention layer.
+
+    Pages are the unit of allocation (`serve.kv_pages.PageTable` owns the
+    slot -> page mapping); one extra trash page at index `num_pages`
+    swallows writes of inactive slots so the jitted step signature stays
+    static regardless of which slots hold live requests.
+    """
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    shape = (num_pages + 1, cfg.kv_heads, page_size, cfg.head_width)
+    return {"k_pages": jnp.zeros(shape, dt), "v_pages": jnp.zeros(shape, dt)}
+
+
+def paged_decode_attention(
+    params: dict,
+    cfg: ModelConfig,
+    x: jax.Array,              # (B, 1, D)
+    cache: dict,               # k_pages/v_pages (N+1, Hkv, ps, dh)
+    page_map: jax.Array,       # (B, P) physical page per logical page, N=trash
+    steps: jax.Array,          # (B,) int32 per-slot absolute position
+    write_mask: jax.Array,     # (B,) bool — False routes the write to trash
+    *,
+    kind: str = "attn",
+) -> tuple[jax.Array, dict]:
+    """`decode_attention` reading/writing KV through a page table.
+
+    The logical sequence of slot b lives at pages `page_map[b]` in order:
+    position t maps to page t // ps, offset t % ps, so the gathered
+    (B, Hkv, P*ps, dh) view reproduces the dense cache layout exactly and
+    the attention math below is bitwise-identical to the dense path
+    (padded/stale entries carry an exact -inf bias, contributing exact
+    zeros to the softmax on both paths).  Per-slot `steps` replace the
+    dense path's scalar clock — slots at different depths decode in one
+    batched call (the continuous-batching enabler).
+    """
+    H, Hkv, dh = cfg.num_heads, cfg.kv_heads, cfg.head_width
+    B = x.shape[0]
+    num_pages = cache["k_pages"].shape[0] - 1
+    ps = cache["k_pages"].shape[2]
+    P = page_map.shape[1]
+
+    q = _heads(dense(x, params["wq"]), H, dh)        # (B,H,1,dh)
+    pos_b = steps.astype(jnp.int32)
+    if cfg.mrope_sections is not None:
+        qpos = jnp.broadcast_to(pos_b[:, None, None], (B, 1, 3))
+    else:
+        qpos = pos_b[:, None]
+    q = _apply_rope(cfg, q, qpos)
+    k_new = _heads(dense(x, params["wk"]), Hkv, dh)  # (B,Hkv,1,dh)
+    v_new = _heads(dense(x, params["wv"]), Hkv, dh)
+    k_new = _apply_rope(cfg, k_new, qpos)
+
+    # scatter the new token's KV into its page (trash page when masked)
+    logical = jnp.clip(pos_b // ps, 0, P - 1)
+    phys = jnp.take_along_axis(page_map, logical[:, None], axis=1)[:, 0]
+    phys = jnp.where(write_mask, phys, num_pages)
+    off = pos_b % ps
+    k_pages = cache["k_pages"].at[phys, :, off, :].set(
+        k_new[:, :, 0, :], mode="drop"
+    )
+    v_pages = cache["v_pages"].at[phys, :, off, :].set(
+        v_new[:, :, 0, :], mode="drop"
+    )
+
+    # gather the slot's pages back into a contiguous logical view
+    k = k_pages[page_map]                            # (B,P,Hkv,ps,dh)
+    v = v_pages[page_map]
+    k = k.transpose(0, 2, 1, 3, 4).reshape(B, Hkv, P * ps, dh)
+    v = v.transpose(0, 2, 1, 3, 4).reshape(B, Hkv, P * ps, dh)
+    k_pos = jnp.broadcast_to(jnp.arange(P * ps, dtype=jnp.int32)[None], (B, P * ps))
+    keep = k_pos <= pos_b[:, None]
+    window = cfg.window if kind == "local" else None
+    if window is not None:
+        keep &= k_pos > (pos_b[:, None] - window)
+    bias = jnp.where(keep, 0.0, _NEG_INF)[:, None, :]
+    o = full_attention(q, k, v, bias, softcap=cfg.attn_logit_softcap,
+                       scale=_scale(cfg))
+    out = dense(_unheads(o), params["wo"])
+    return out, {"k_pages": k_pages, "v_pages": v_pages}

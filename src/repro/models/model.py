@@ -21,7 +21,10 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from .attention import attention, attn_params, decode_attention, init_kv_cache
+from .attention import (
+    attention, attn_params, decode_attention, init_kv_cache,
+    init_paged_kv_cache, paged_decode_attention,
+)
 from .config import ModelConfig
 from .layers import (
     P_, abstract_tree, count_params, current_mesh, dense, init_tree,
@@ -36,7 +39,10 @@ from .rwkv import (
     rwkv_time_mix, rwkv_time_mix_decode,
 )
 
-__all__ = ["Transformer", "forward", "loss_fn", "init_cache", "decode_step"]
+__all__ = [
+    "Transformer", "forward", "loss_fn", "init_cache", "decode_step",
+    "init_paged_cache", "paged_decode_step",
+]
 
 DP_DEFAULT = ("data",)
 
@@ -399,6 +405,123 @@ def decode_step(params, cfg: ModelConfig, cache: dict, tokens: jax.Array,
     logits = _unembed(params, cfg, x)[:, 0]
     new_cache = {"groups": new_groups, "step": step + 1, "memory": memory}
     return logits, new_cache
+
+
+# --------------------------- paged serving ----------------------------
+
+
+def init_paged_cache(
+    cfg: ModelConfig, num_slots: int, num_pages: int, page_size: int
+) -> dict:
+    """Decode state for the paged/continuous-batching path.
+
+    Attention layers share one page pool per layer (plus a trash page —
+    see `attention.init_paged_kv_cache`); recurrent layers (rglru/rwkv)
+    keep ordinary per-slot state that the engine re-initializes on
+    admission via the step's `write_mask`.  Encoder-decoder configs are
+    not paged (their decode state is per-request memory, not a KV pool).
+    """
+    if cfg.encoder_layers:
+        raise ValueError(
+            "paged serving supports decoder-only configs; "
+            f"{cfg.name} has encoder layers"
+        )
+
+    def layer_state(kind):
+        if kind in ("attn", "local"):
+            return init_paged_kv_cache(cfg, num_pages, page_size)
+        if kind == "rglru":
+            return init_rglru_state(cfg, num_slots)
+        return init_rwkv_state(cfg, num_slots)
+
+    groups = []
+    for unit, repeats in cfg.scan_groups():
+        unit_state = {f"b{i}": layer_state(kind) for i, kind in enumerate(unit)}
+        groups.append(
+            jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None], (repeats,) + a.shape),
+                unit_state,
+            )
+        )
+    return {"groups": groups}
+
+
+def _block_decode_paged(p, cfg: ModelConfig, kind: str, x, state,
+                        page_map, steps, write_mask):
+    if kind in ("attn", "local"):
+        h, new = paged_decode_attention(
+            p["attn"], cfg, _apply_norm(p["ln1"], cfg, x, kind), state,
+            page_map, steps, write_mask, kind=kind,
+        )
+        if cfg.post_norms:
+            h = _apply_norm(p["post1"], cfg, h, kind)
+        x = x + h
+        z = _apply_norm(p["ln2"], cfg, x, kind)
+        h = (moe_ffn(p["moe"], cfg, z) if cfg.num_experts
+             else mlp(z, p["mlp"], cfg.mlp_kind))
+        if cfg.post_norms:
+            h = _apply_norm(p["post2"], cfg, h, kind)
+        return x + h, new
+    # recurrent layers: per-slot (B, ...) state — zero a slot's state at
+    # the first token of a fresh admission (init state is all-zeros, so
+    # slot reuse cannot leak the previous request's recurrence), run the
+    # dense decode body, then hold back non-written slots' updates
+    def bmask(m, a):
+        if a.shape[0] != m.shape[0]:      # rwkv wkv state is (B*H, N, N)
+            m = jnp.repeat(m, a.shape[0] // m.shape[0])
+        return m.reshape((-1,) + (1,) * (a.ndim - 1))
+
+    fresh = write_mask & (steps == 0)
+    state = jax.tree.map(
+        lambda o: jnp.where(bmask(fresh, o), jnp.zeros((), o.dtype), o),
+        state,
+    )
+    h, new = _block_decode(p, cfg, kind, x, state, steps, None)
+    return h, jax.tree.map(
+        lambda n, o: jnp.where(bmask(write_mask, n), n, o), new, state
+    )
+
+
+def paged_decode_step(
+    params,
+    cfg: ModelConfig,
+    cache: dict,               # from init_paged_cache
+    tokens: jax.Array,         # (B,) current token per slot
+    page_map: jax.Array,       # (B, P) int32 physical page ids (trash = N)
+    steps: jax.Array,          # (B,) int32 per-slot absolute position
+    write_mask: jax.Array,     # (B,) bool — gate KV writes / state updates
+):
+    """One continuous-batching step: every slot decodes its own position.
+
+    Identical math to `decode_step` per live slot (bitwise on the lax
+    path when P * page_size == the dense cache's max_len); masked slots
+    write to the trash page and keep their recurrent state, so one
+    compiled step serves any admit/retire pattern.
+    """
+    x = _embed(params, cfg, tokens[:, None])
+    new_groups = []
+    for g_idx, (unit, repeats) in enumerate(cfg.scan_groups()):
+        gp = params["groups"][g_idx]
+        gs = cache["groups"][g_idx]
+
+        def unit_fn(h, inp, unit=unit):
+            layer_p, layer_s = inp
+            new_s = {}
+            for i, kind in enumerate(unit):
+                h, ns = _block_decode_paged(
+                    layer_p[f"b{i}"], cfg, kind, h, layer_s[f"b{i}"],
+                    page_map, steps, write_mask,
+                )
+                new_s[f"b{i}"] = ns
+            return h, new_s
+
+        x, ns = jax.lax.scan(
+            unit_fn, x, (gp, gs), unroll=True if cfg.scan_unroll else 1
+        )
+        new_groups.append(ns)
+    x = _apply_norm(params["final_norm"], cfg, x, "attn")
+    logits = _unembed(params, cfg, x)[:, 0]
+    return logits, {"groups": new_groups}
 
 
 # ------------------------------ facade --------------------------------

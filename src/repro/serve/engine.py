@@ -35,7 +35,21 @@ class Generator:
     eos_id: int = 1
 
     def __post_init__(self):
-        self._step = jax.jit(make_serve_step(self.cfg, dp=None))
+        step = make_serve_step(self.cfg, dp=None)
+        self._step = jax.jit(step)
+
+        def prefill(params, cache, prompts_tb):
+            # teacher-force the whole prompt in ONE scanned call instead
+            # of P python-dispatched steps; returns last-position logits
+            def body(cache, tok):
+                logits, cache = step(params, cache, tok)
+                return cache, logits
+
+            cache, logits = jax.lax.scan(body, cache, prompts_tb)
+            return logits[-1], cache
+
+        self._prefill = jax.jit(prefill)
+        self.last_stats: dict = {}
 
     def generate(
         self,
@@ -50,22 +64,35 @@ class Generator:
             dp=None,
         )
         key = jax.random.PRNGKey(seed)
-        # prefill by teacher-forcing the prompt through decode steps
-        logits = None
-        for t in range(P):
-            logits, cache = self._step(self.params, cache, jnp.asarray(prompts[:, t]))
+        logits, cache = self._prefill(
+            self.params, cache, jnp.asarray(prompts.T)
+        )
         out = []
         done = np.zeros(B, bool)
+        live_tokens = 0
         tok = self._sample(logits, key)
         for t in range(steps):
-            out.append(np.asarray(tok))
-            done |= np.asarray(tok) == self.eos_id
+            # finished slots emit eos_id forever; only live slots count
+            # toward token throughput
+            tok_np = np.where(done, self.eos_id, np.asarray(tok))
+            live_tokens += int((~done).sum())
+            out.append(tok_np)
+            done |= tok_np == self.eos_id
             if done.all():
                 break
             key, sub = jax.random.split(key)
-            logits, cache = self._step(self.params, cache, tok)
+            logits, cache = self._step(
+                self.params, cache, jnp.asarray(tok_np)
+            )
             tok = self._sample(logits, sub)
-        return np.stack(out, axis=1)
+        result = np.stack(out, axis=1)
+        self.last_stats = {
+            "prompt_len": P,
+            "decode_steps": result.shape[1],
+            "live_tokens": live_tokens,
+            "emitted_tokens": int(result.size),
+        }
+        return result
 
     def _sample(self, logits, key):
         if self.temperature <= 0.0:

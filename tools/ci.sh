@@ -22,6 +22,10 @@
 #                                   #   (2 steps, topk+rotation, multiscale,
 #                                   #   R=8) and an async-overlap train
 #                                   #   smoke (one-step-delayed averaging)
+#                                   # + serving-fleet smoke (16 replicas,
+#                                   #   p2c-from-gossip vs oracle vs random)
+#                                   #   and a BENCH_serve.json trajectory
+#                                   #   entry (fleet + paged-decode tok/s)
 #
 # The slow tier (multi-device subprocess + vmap-/backend-parity tests) is
 # NOT run here — .github/workflows/ci.yml's second job runs `-m slow`.
@@ -61,6 +65,9 @@ if [[ "${REPRO_BENCH_SMOKE:-0}" == "1" ]]; then
     echo "== async-overlap decentralized-train smoke (R=8, one_step) =="
     python examples/decentralized_consensus.py --strategy multiscale \
         --overlap --replicas 8 --steps 3
+    echo "== serving-fleet smoke (16 replicas, 3 routers) + BENCH_serve.json =="
+    python examples/serve_fleet.py --replicas 16 --ticks 120
+    python -m benchmarks.serve_bench --label "ci smoke"
 fi
 
 echo "CI OK"
