@@ -6,7 +6,7 @@ import time
 
 import numpy as np
 
-from repro.core import multiscale_gossip, random_geometric_graph
+from repro.core import build_plan, multiscale_gossip, random_geometric_graph
 
 from .common import csv_line, save_artifact
 
@@ -14,13 +14,20 @@ from .common import csv_line, save_artifact
 def run(n: int = 2000, trials: int = 3, eps: float = 1e-4,
         max_k: int = 6, artifact: str = "fig2_levels") -> list[str]:
     rows = {}
+    plan_build_s: dict = {}
     t0 = time.time()
     for k in range(2, max_k + 1):
-        msgs, errs = [], []
+        msgs, errs, builds = [], [], []
         for t in range(trials):
             g = random_geometric_graph(n, seed=100 + t)
             x0 = np.random.default_rng(t).normal(0, 1, n)
-            r = multiscale_gossip(g, x0, eps=eps, k=k, seed=t, weighted=True)
+            # the plan multiscale_gossip would build internally, made
+            # explicit so its build_seconds breakdown can be recorded
+            plan = build_plan(g, k=k, seed=t)
+            builds.append(plan.build_seconds or {})
+            r = multiscale_gossip(
+                g, x0, eps=eps, k=k, seed=t, weighted=True, plan=plan
+            )
             msgs.append(r.messages)
             errs.append(r.error(x0))
         rows[k] = {
@@ -28,7 +35,14 @@ def run(n: int = 2000, trials: int = 3, eps: float = 1e-4,
             "messages_std": float(np.std(msgs)),
             "err_mean": float(np.mean(errs)),
         }
-    save_artifact(artifact, {"n": n, "eps": eps, "rows": rows})
+        stages = sorted({s for b in builds for s in b})
+        plan_build_s[k] = {
+            s: float(np.mean([b.get(s, 0.0) for b in builds])) for s in stages
+        }
+    save_artifact(
+        artifact,
+        {"n": n, "eps": eps, "rows": rows, "plan_build_s": plan_build_s},
+    )
     total_us = (time.time() - t0) * 1e6
     out = []
     best_k = min(rows, key=lambda k: rows[k]["messages_mean"])

@@ -53,6 +53,7 @@ def run(sizes=(500, 1000, 2000, 4000, 8000), trials: int = 3,
                   "path_averaging"]
     table: dict = {a: {} for a in algo_names}
     timing: dict = {a: 0.0 for a in algo_names}
+    plan_build_s: dict = {}
     warmup_s = _warm_jit(backend)
 
     def record(name, n, res, x0, dt):
@@ -70,6 +71,10 @@ def run(sizes=(500, 1000, 2000, 4000, 8000), trials: int = 3,
         ])
         plan_auto = build_plan(g, seed=0)          # shared by auto-k variants
         plan_2l = build_plan(g, k=2, a=0.5, seed=0)
+        plan_build_s[int(n)] = {
+            "auto_k": dict(plan_auto.build_seconds or {}),
+            "k2": dict(plan_2l.build_seconds or {}),
+        }
         ms_variants = {
             "multiscale": dict(plan=plan_auto),
             "multiscale_fi": dict(plan=plan_auto, fixed_ticks_scale=1.0),
@@ -135,6 +140,7 @@ def run(sizes=(500, 1000, 2000, 4000, 8000), trials: int = 3,
             "graph_seeds": {int(n): 1000 + int(n) for n in sizes},
             "jit_warmup_s": float(warmup_s),
             "wall_clock_s": {k: float(v) for k, v in timing.items()},
+            "plan_build_s": plan_build_s,
             "summary": summary,
             "scaling_exponent": fits,
         },

@@ -19,6 +19,7 @@ Also exposed as the `gossip` suite in `benchmarks.run`.
 """
 from __future__ import annotations
 
+import glob
 import json
 import os
 import subprocess
@@ -58,10 +59,35 @@ def load_trajectory() -> list:
     return json.load(open(TRAJECTORY))
 
 
+def validate_entry(entry: dict) -> None:
+    """Reject a malformed NEW entry before it lands in the trajectory.
+
+    Every new entry must stamp a real `unix_time` and every present
+    fig3 smoke record must carry the measured `jit_warmup_s` — `null`
+    placeholders made the earliest entries useless for warmup-cost
+    trend lines.  Historical entries already in the file are NOT
+    backfilled or re-validated; the gate applies at append time only.
+    """
+    ut = entry.get("unix_time")
+    if not isinstance(ut, int) or ut <= 0:
+        raise ValueError(f"gossip_trajectory entry missing unix_time: {ut!r}")
+    for backend, rec in entry.get("fig3_smoke", {}).items():
+        if "missing" in rec:
+            continue
+        if not isinstance(rec.get("jit_warmup_s"), (int, float)):
+            raise ValueError(
+                f"gossip_trajectory entry fig3_smoke[{backend!r}] lacks "
+                f"jit_warmup_s — regenerate the smoke artifact "
+                f"(REPRO_BENCH_SMOKE=1 tools/ci.sh) before recording"
+            )
+
+
 def record_entry(entry: dict) -> None:
     """Append `entry`, replacing any prior entry for the same
     (commit, label) — re-running at one commit updates in place while
-    distinct labels (e.g. a pinned baseline) survive."""
+    distinct labels (e.g. a pinned baseline) survive.  New entries are
+    validated (`validate_entry`); the historical tail is left as-is."""
+    validate_entry(entry)
     key = (entry["commit"], entry.get("label", ""))
     traj = [
         e for e in load_trajectory()
@@ -92,11 +118,32 @@ def build_entry(label: str = "", kernels: bool = True) -> dict:
             "trials": art["trials"],
             "jit_warmup_s": art.get("jit_warmup_s"),
             "wall_clock_s": art["wall_clock_s"],
+            "plan_build_s": art.get("plan_build_s"),
             "messages_mean": {
                 algo: next(iter(rows.values()))["messages_mean"]
                 for algo, rows in art["summary"].items()
             },
         }
+    large = {}
+    for path in sorted(glob.glob(os.path.join(ARTIFACTS, "large_n_*.json"))):
+        name = os.path.splitext(os.path.basename(path))[0]
+        if name.endswith("_check"):
+            continue
+        art = load_artifact(name)
+        large[name] = {
+            "n": art["n"],
+            "trials": art["trials"],
+            "backend": art["backend"],
+            "fixed_ticks_scale": art["fixed_ticks_scale"],
+            "messages": art["messages"],
+            "err": art["err"],
+            "wall_clock_s": art["wall_clock_s"],
+            "plan_build_s": art["plan_build_s"],
+            "memory": art["memory"],
+            "overlap_ratio": (art.get("overlap") or {}).get("ratio"),
+        }
+    if large:
+        entry["large_n"] = large
     if kernels:
         from .kernel_bench import pair_apply_bench
 
@@ -118,6 +165,13 @@ def run(label: str = "", kernels: bool = True) -> list[str]:
             f"gossip/fig3_smoke_{backend}", ms * 1e6,
             f"n={rec['n']} multiscale_wall={ms:.2f}s "
             f"msgs={rec['messages_mean'].get('multiscale', 0):.0f}",
+        ))
+    for name, rec in entry.get("large_n", {}).items():
+        lines.append(csv_line(
+            f"gossip/{name}", rec["wall_clock_s"]["execute_cold"] * 1e6,
+            f"n={rec['n']} msgs={rec['messages'][0]} "
+            f"plan={rec['plan_build_s'].get('total', 0.0):.2f}s "
+            f"warm={rec['wall_clock_s']['execute_warm']:.2f}s",
         ))
     for key, us in entry.get("pair_apply_us", {}).items():
         lines.append(csv_line(f"gossip/pair_apply_{key}", us, "see kernels"))

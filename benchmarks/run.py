@@ -26,7 +26,7 @@ def main() -> None:
 
     from . import (
         fig2_levels, fig3_vs_path_averaging, fig4_cdf, fig5_failures,
-        gossip_trajectory, kernel_bench, roofline, serve_bench,
+        gossip_trajectory, kernel_bench, large_n, roofline, serve_bench,
         table1_node_utilization,
     )
 
@@ -47,6 +47,9 @@ def main() -> None:
         "sync": lambda: _subprocess_lines("benchmarks.sync_collectives"),
         "roofline": roofline.run,
         "gossip": gossip_trajectory.run,
+        "large_n": lambda: large_n.run(
+            n=1_000_000 if args.full else 100_000
+        ),
         "serve": serve_bench.run,
     }
     if args.only:

@@ -32,8 +32,11 @@ from .partition import Partition, auto_levels, build_partition
 from .plan import HierarchyPlan, LevelPlan, build_plan
 from .rgg import Graph, connectivity_radius, grid_graph, random_geometric_graph
 from .schedule import (
+    CsrGraphs,
     ExchangeSchedule,
     compose_schedule,
+    dense_to_csr,
+    flat_usage_to_dense,
     sample_schedule,
     sample_tick,
 )
@@ -52,6 +55,7 @@ from .synchronous import SyncMultiscaleResult, synchronous_multiscale
 __all__ = [
     "BaselineResult",
     "BatchedRoutes",
+    "CsrGraphs",
     "EngineResult",
     "Graph",
     "GossipResult",
@@ -70,7 +74,9 @@ __all__ = [
     "build_partition",
     "build_plan",
     "connectivity_radius",
+    "dense_to_csr",
     "execute_plan",
+    "flat_usage_to_dense",
     "geographic_gossip",
     "gossip_core",
     "gossip_until",

@@ -7,21 +7,33 @@ representative election (static, from the plan), Alg.-1 line-16
 reweighting and value promotion as gathers/scatters, send attribution as
 gathers through the plan's route-incidence CSR plus one scatter-add, and
 the dissemination down-pass as a gather — no host round-trips between
-levels.  The executor is `vmap`-ped over trial seeds, so
-`execute_plan(plan, x0, seeds=[s0..sT])` simulates T independent
-Monte-Carlo trials in one compiled call — and `mesh=` additionally
-`shard_map`s that trial axis over a 1-axis device mesh, so paper-scale
-trial counts (10-25) fan out over real hardware (trials are padded up
-to a device multiple and the padding discarded).
+levels.  Adjacency and usage counters are CSR end-to-end (flat
+per-directed-edge arrays from `LevelPlan`), so device memory scales with
+edge count, not with ``B*C*max_deg`` padding.
+
+The executor is `vmap`-ped over trial seeds, so `execute_plan(plan, x0,
+seeds=[s0..sT])` simulates T independent Monte-Carlo trials in one
+compiled call.  `mesh=` shards that computation over real hardware:
+
+* a 1-axis mesh shard_maps the trial axis (trials are padded up to a
+  device multiple and the padding discarded);
+* a 2-axis mesh with axes named exactly ``("trials", "nodes")``
+  additionally shards every level's graph batch over node blocks.  Each
+  shard samples the full global exchange schedule (threefry streams
+  have no prefix property) and slices its own columns, so per-trial
+  results are bitwise-identical to the unsharded run; cross-shard
+  traffic is a psum at each overlay promotion boundary (reps move
+  between graphs exactly there) plus the final assembly — the gossip
+  inner loops themselves run shard-local.
 
 Backends: ``backend="lax"`` is the reference inner kernel;
 ``backend="pallas"`` walks each chunk's presampled schedule with the
-`kernels.pair_apply` VMEM-resident TPU kernel (bitwise-identical to
-lax; non-TPU hosts dispatch to the jnp oracle); ``backend="matmul"``
-composes each chunk's mixing matrix with a log2 tree of batched MXU
-matmuls (values agree up to f32 rounding).  ``schedule="per_tick"``
-keeps the legacy sequential scan as the parity reference (see
-`core.gossip`).
+`kernels.pair_apply` TPU kernel, streaming cell state through VMEM in
+cell blocks (bitwise-identical to lax; non-TPU hosts dispatch to the
+jnp oracle); ``backend="matmul"`` composes each chunk's mixing matrix
+with a log2 tree of batched MXU matmuls (values agree up to f32
+rounding).  ``schedule="per_tick"`` keeps the legacy sequential scan as
+the parity reference (see `core.gossip`).
 """
 from __future__ import annotations
 
@@ -35,6 +47,7 @@ import numpy as np
 
 from .gossip import GOSSIP_BACKENDS, gossip_core
 from .plan import HierarchyPlan
+from .schedule import CsrGraphs
 
 __all__ = ["EngineResult", "execute_plan", "fi_ticks"]
 
@@ -82,8 +95,10 @@ class EngineResult:
     level_messages: np.ndarray   # (T, L) per executed level
     level_ticks: np.ndarray      # (T, L) max ticks over the level's graphs
     level_converged: np.ndarray  # (T, L) fraction of graphs converged
-    edge_usage: list             # L arrays (T, B, C, D) exchange counts
-    #                              (only when run with collect_usage=True)
+    edge_usage: list             # L flat (T, nnz+1) exchange counters in the
+    #                              level's CSR layout (collect_usage=True
+    #                              only; LevelPlan.dense_usage restores the
+    #                              historical (B, C, D) view)
     backend: str
 
     @property
@@ -97,17 +112,22 @@ class EngineResult:
 
 def _level_consts(lp):
     c = {
-        "neighbors": jnp.asarray(lp.neighbors, jnp.int32),
-        "degrees": jnp.asarray(lp.degrees, jnp.int32),
-        "n_nodes": jnp.asarray(lp.n_nodes, jnp.int32),
+        "adj": CsrGraphs(
+            start=jnp.asarray(lp.nbr_start, jnp.int32),
+            nbr=jnp.asarray(lp.nbr_flat, jnp.int32),
+            hops=jnp.asarray(lp.hop_flat, jnp.int32),
+            degrees=jnp.asarray(lp.degrees, jnp.int32),
+            n_nodes=jnp.asarray(lp.n_nodes, jnp.int32),
+        ),
         "node_mask": jnp.asarray(lp.node_mask, bool),
-        "edge_hops": jnp.asarray(lp.edge_hops, jnp.int32),
         "slot_node": jnp.asarray(lp.slot_node, jnp.int32),
     }
     if lp.kind == "cells":
-        c["partner_node"] = jnp.asarray(lp.partner_node, jnp.int32)
+        # per-flat-entry owner/partner global ids (sentinel = trash slot n)
+        c["row_node"] = jnp.asarray(lp.row_node, jnp.int32)
+        c["partner_flat"] = jnp.asarray(lp.partner_flat, jnp.int32)
     else:
-        for name in ("edge_b", "edge_i", "edge_si", "edge_j", "edge_sj",
+        for name in ("edge_pos_i", "edge_pos_j",
                      "inc_node", "inc_edge", "inc_count"):
             c[name] = jnp.asarray(getattr(lp, name), jnp.int32)
     if lp.rep_slot is not None:
@@ -141,13 +161,20 @@ def execute_plan(
     x0 may be (n,) — shared across trials — or (T, n) per-trial.  Each
     seed drives one trial's exchange randomness; the plan (partition,
     election, routes) is shared, so trials differ only in gossip noise.
-    `mesh=` (a 1-axis `jax.sharding.Mesh`) shards the vmapped trial
-    axis over devices via shard_map: T is padded up to a multiple of
-    the mesh size with throwaway trials, each device runs its local
-    slice of the vmap, and per-trial results are bitwise-independent of
-    the sharding.  `collect_usage=True` additionally returns the raw
-    per-level exchange counts (for attribution audits); leave it off on
-    the hot path.
+
+    `mesh=` shards the computation via shard_map: a 1-axis
+    `jax.sharding.Mesh` shards the vmapped trial axis (T is padded up
+    to a multiple of the mesh size with throwaway trials); a 2-axis
+    mesh with axes named ``("trials", "nodes")`` also blocks every
+    level's graph batch over the "nodes" axis, with psum halos only at
+    promotion boundaries — per-trial results are bitwise-independent of
+    the sharding either way.  The node-sharded path requires
+    ``schedule="presampled"`` and does not support `collect_usage`
+    (the flat usage buffer is deliberately never assembled globally).
+
+    `collect_usage=True` additionally returns the raw per-level flat
+    exchange counters (for attribution audits); leave it off on the hot
+    path.
     """
     if backend not in GOSSIP_BACKENDS:
         raise ValueError(f"unknown backend {backend!r}")
@@ -159,11 +186,33 @@ def execute_plan(
     per_trial_x0 = x0.ndim == 2
     if per_trial_x0 and x0.shape[0] != T:
         raise ValueError(f"x0 leading dim {x0.shape[0]} != trials {T}")
-    if mesh is not None and len(mesh.shape) != 1:
-        raise ValueError(
-            f"execute_plan wants a 1-axis trial mesh, got {dict(mesh.shape)}"
-        )
-    pad = 0 if mesh is None else (-T) % mesh.devices.size
+    node_mesh = False
+    if mesh is not None:
+        if len(mesh.shape) == 2 and tuple(mesh.axis_names) == (
+            "trials", "nodes",
+        ):
+            node_mesh = True
+            if schedule != "presampled":
+                raise ValueError(
+                    "the (trials, nodes) mesh requires schedule='presampled'"
+                )
+            if collect_usage:
+                raise ValueError(
+                    "collect_usage is not supported on the (trials, nodes) "
+                    "mesh (flat usage stays shard-local)"
+                )
+        elif len(mesh.shape) != 1:
+            raise ValueError(
+                "execute_plan wants a 1-axis trial mesh or a 2-axis mesh "
+                f"with axes ('trials', 'nodes'), got {dict(mesh.shape)}"
+            )
+    if mesh is None:
+        pad = 0
+    elif node_mesh:
+        pad = (-T) % mesh.shape["trials"]
+    else:
+        pad = (-T) % mesh.devices.size
+    nd = mesh.shape["nodes"] if node_mesh else 1
     V = 2 if weighted else 1
     L = len(plan.levels)
     K = plan.k
@@ -190,66 +239,106 @@ def execute_plan(
     # touches the plan's big constant arrays again
     consts: list = []
 
+    def _shard_cols(B):
+        """This shard's contiguous block of the B graphs: clipped column
+        ids plus the realness mask (clipped duplicates sample masked-out
+        schedules, so they contribute nothing anywhere)."""
+        Bs = -(-B // nd)
+        sidx = jax.lax.axis_index("nodes") * Bs + jnp.arange(Bs)
+        return jnp.minimum(sidx, B - 1), sidx < B, sidx
+
     def _run(x0_row, key, eps_arr, maxt_arr):
         node_sends = jnp.zeros(n + 1, jnp.int32)  # slot n swallows padding
         lvl_msgs, lvl_ticks, lvl_conv, usages = [], [], [], []
         xb = None
         for li, (lp, c, chk) in enumerate(zip(plan.levels, consts, chk_levels)):
             B = lp.num_graphs
+            if node_mesh:
+                cols, ok, _ = _shard_cols(B)
+                mask = c["node_mask"][cols] & ok[:, None]
+                shard = (cols, ok)
+            else:
+                cols, ok, mask, shard = slice(None), None, c["node_mask"], None
             if lp.kind == "cells":
                 vals = jnp.where(
-                    c["node_mask"], x0_row[jnp.clip(c["slot_node"], 0)], 0.0
+                    mask, x0_row[jnp.clip(c["slot_node"][cols], 0)], 0.0
                 )
                 if weighted:
-                    w = c["node_mask"].astype(jnp.float32)
-                    xb = jnp.stack([vals * w, w], axis=-1)
+                    w = mask.astype(jnp.float32)
+                    xb_loc = jnp.stack([vals * w, w], axis=-1)
                 else:
-                    xb = vals[..., None]
+                    xb_loc = vals[..., None]
+            else:
+                # promotion left xb global (the psum halo); take our block
+                xb_loc = xb[cols] if node_mesh else xb
             x, usage, msgs, done, ticks = gossip_core(
-                xb, c["neighbors"], c["degrees"], c["n_nodes"],
-                c["edge_hops"], c["node_mask"],
+                xb_loc, c["adj"], mask,
                 eps_arr[li], jax.random.fold_in(key, li),
                 max_ticks=maxt_arr[li], check_every=chk, loss_p=loss_p,
                 backend=backend, schedule=schedule, interpret=interpret,
+                node_shard=shard,
             )
             # per-graph counters stay int32 on device; they are summed on
             # the host in int64 (jnp.sum would wrap without x64 mode)
             lvl_msgs.append(msgs)
-            lvl_ticks.append(ticks.max())
-            lvl_conv.append(done.mean())
+            if node_mesh:
+                lvl_ticks.append(jax.lax.pmax(ticks.max(), "nodes"))
+                lvl_conv.append(
+                    jax.lax.psum((done & ok).sum(), "nodes") / B
+                )
+            else:
+                lvl_ticks.append(ticks.max())
+                lvl_conv.append(done.mean())
             if collect_usage:
                 usages.append(usage)
-            # attribution: one scatter-add per level
+            # attribution: gathers through the plan CSR + one scatter-add
+            # per level.  Under node sharding `usage` is the shard's
+            # partial flat counter (both directed entries of an overlay
+            # edge live in one graph, hence one shard), so the partial
+            # node_sends just psum at the end.
             if lp.kind == "cells":
-                idx = jnp.where(c["slot_node"] >= 0, c["slot_node"], n)
-                node_sends = node_sends.at[idx.ravel()].add(
-                    usage.sum(-1).ravel()
-                )
-                pidx = jnp.where(c["partner_node"] >= 0, c["partner_node"], n)
-                node_sends = node_sends.at[pidx.ravel()].add(usage.ravel())
+                node_sends = node_sends.at[c["row_node"]].add(usage)
+                node_sends = node_sends.at[c["partner_flat"]].add(usage)
             else:
-                usage_e = (
-                    usage[c["edge_b"], c["edge_i"], c["edge_si"]]
-                    + usage[c["edge_b"], c["edge_j"], c["edge_sj"]]
-                )
+                usage_e = usage[c["edge_pos_i"]] + usage[c["edge_pos_j"]]
                 node_sends = node_sends.at[c["inc_node"]].add(
                     usage_e[c["inc_edge"]] * c["inc_count"]
                 )
             # promotion (gathers; Alg.1 line 16 on the finest level)
             if lp.rep_slot is not None:
-                v = x[jnp.arange(B), c["rep_slot"]]          # (B, V)
+                Bl = x.shape[0]
+                v = x[jnp.arange(Bl), c["rep_slot"][cols]]   # (Bl, V)
                 if weighted:
-                    v = v * c["n_nodes"][:, None].astype(jnp.float32)
+                    v = v * c["adj"].n_nodes[cols, None].astype(jnp.float32)
                 else:
-                    v = v * c["line16"][:, None]
+                    v = v * c["line16"][cols, None]
                 B2, C2 = plan.levels[li + 1].node_mask.shape
-                xb = jnp.zeros((B2, C2, V), jnp.float32).at[
-                    c["next_graph"], c["next_slot"]
-                ].set(v)
+                if node_mesh:
+                    # reps hop shards here: scatter into a trash-rowed
+                    # global buffer and psum the halo over node blocks
+                    tg = jnp.where(ok, c["next_graph"][cols], B2)
+                    full = jnp.zeros((B2 + 1, C2, V), jnp.float32).at[
+                        tg, c["next_slot"][cols]
+                    ].set(jnp.where(ok[:, None], v, 0.0))
+                    xb = jax.lax.psum(full, "nodes")[:B2]
+                else:
+                    xb = jnp.zeros((B2, C2, V), jnp.float32).at[
+                        c["next_graph"], c["next_slot"]
+                    ].set(v)
         # final estimate + dissemination down-pass
         est = x[..., 0] if V == 1 else x[..., 0] / jnp.maximum(x[..., 1], 1e-30)
+        if node_mesh:
+            BL, CL = plan.levels[-1].node_mask.shape
+            cols, ok, sidx = _shard_cols(BL)
+            tg = jnp.where(ok, sidx, BL)
+            full = jnp.zeros((BL + 1, CL), jnp.float32).at[tg].set(
+                jnp.where(ok[:, None], est, 0.0)
+            )
+            est = jax.lax.psum(full, "nodes")[:BL]
         x_final = est[plan.final_graph, plan.final_slot]
         node_sends = node_sends[:n]
+        if node_mesh:
+            node_sends = jax.lax.psum(node_sends, "nodes")
         if plan.disseminate:
             node_sends = node_sends + 1  # the n-message down-pass
         return (
@@ -292,12 +381,25 @@ def execute_plan(
             from jax.experimental.shard_map import shard_map
             from jax.sharding import PartitionSpec as P
 
-            (axis,) = mesh.axis_names
-            run_v = shard_map(
-                run_v, mesh=mesh,
-                in_specs=(P(axis) if per_trial_x0 else P(), P(axis), P(), P()),
-                out_specs=P(axis), check_rep=False,
-            )
+            if node_mesh:
+                Pt = P("trials")
+                run_v = shard_map(
+                    run_v, mesh=mesh,
+                    in_specs=(Pt if per_trial_x0 else P(), Pt, P(), P()),
+                    out_specs=(
+                        Pt, Pt,
+                        tuple(P("trials", "nodes") for _ in plan.levels),
+                        Pt, Pt, (),
+                    ),
+                    check_rep=False,
+                )
+            else:
+                (axis,) = mesh.axis_names
+                run_v = shard_map(
+                    run_v, mesh=mesh,
+                    in_specs=(P(axis) if per_trial_x0 else P(), P(axis), P(), P()),
+                    out_specs=P(axis), check_rep=False,
+                )
         jitted = jax.jit(run_v)
         try:
             fn = jitted.lower(*args).compile(compiler_options=_COMPILER_OPTS)
@@ -309,9 +411,13 @@ def execute_plan(
         xf, sends, lt, lc = xf[:T], sends[:T], lt[:T], lc[:T]
         lm = tuple(m[:T] for m in lm)
         usages = tuple(u[:T] for u in usages)
-    # host-side int64 reduction of the per-graph int32 counters
+    # host-side int64 reduction of the per-graph int32 counters (under
+    # node sharding the per-level column count is nd*ceil(B/nd) with
+    # zero-contribution duplicates — slice to the true B before summing)
     level_messages = np.stack(
-        [np.asarray(m, np.int64).sum(axis=1) for m in lm], axis=1
+        [np.asarray(m, np.int64)[:, : lp.num_graphs].sum(axis=1)
+         for m, lp in zip(lm, plan.levels)],
+        axis=1,
     )
     messages = level_messages.sum(axis=1)
     if plan.disseminate:

@@ -31,11 +31,11 @@ value backend:
   body is just two gathers, one average, and two conditional writes
   (the legacy tick with all sampling hoisted out);
 * ``backend="pallas"`` — the `kernels.pair_apply` TPU kernel walks the
-  schedule with the cell state resident in VMEM (no HBM round-trips);
-  its f32 op sequence matches the oracle exactly, so results are
-  bitwise-identical to the lax backend (non-TPU hosts dispatch to the
-  oracle; the kernel itself is validated in interpret mode by the
-  kernel tests);
+  schedule with cell state streamed through VMEM in blocks (no HBM
+  round-trips within a block); its f32 op sequence matches the oracle
+  exactly, so results are bitwise-identical to the lax backend (non-TPU
+  hosts dispatch to the oracle; the kernel itself is validated in
+  interpret mode by the kernel tests);
 * ``backend="matmul"`` — `core.schedule.compose_schedule` folds the
   chunk's elementary pair-average matrices with a log2(T) tree of
   batched matmuls and applies the result via `kernels.cell_mixing`
@@ -48,18 +48,30 @@ interleaved with value updates) as the bitwise-parity reference path;
 it supports the lax backend and the historical pallas
 eye-rebuild-then-scan branch.
 
+Adjacency is CSR (`core.schedule.CsrGraphs`): one flat entry per
+directed edge instead of ``(B, C, D)`` dense padding, with usage
+counted in a flat ``(nnz+1,)`` buffer via a 1-D scatter on the sampled
+`pos` field.  `gossip_until` keeps the historical dense host API — it
+packs dense inputs with `dense_to_csr` and scatters flat usage back to
+``(B, C, D)`` for `GossipResult`.
+
+Node sharding (`node_shard=(cols, ok)`): a shard owns columns `cols` of
+the global batch (clipped duplicates masked by `ok`).  Each shard
+samples the full global schedule — threefry streams have no prefix
+property, so local draws would diverge from the unsharded run — and
+slices its columns, making per-graph results bitwise independent of the
+sharding.  Once a graph converges its exchanges freeze (writes become
+identity, accounting masks to zero), so shards may run different
+while-loop trip counts without affecting any output.
+
 `gossip_core` is the pure-JAX function (usable inside a larger jit /
 vmap — the plan/execute engine in `core.engine` vmaps it over
 Monte-Carlo trial seeds); `gossip_until` is the host-facing wrapper.
 
 Shapes (static under jit):
   x         : (B, C, V)   node values, padded with 0
-  neighbors : (B, C, D)   padded with -1
-  degrees   : (B, C)      0 for padding nodes
-  n_nodes   : (B,)        number of live nodes per graph
-  edge_hops : (B, C, D)   geographic-routing hops for that directed edge
-                          (1 for base graphs); one exchange costs
-                          2*hops single-hop transmissions when reliable
+  adj       : CsrGraphs   start (B,C) / nbr,hops (nnz+1,) / degrees / n_nodes
+  node_mask : (B, C)      live-node mask
 """
 from __future__ import annotations
 
@@ -71,7 +83,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .schedule import compose_schedule, sample_schedule, sample_tick
+from .schedule import (
+    CsrGraphs,
+    compose_schedule,
+    dense_to_csr,
+    flat_usage_to_dense,
+    sample_schedule,
+    sample_tick,
+)
 
 __all__ = ["GossipResult", "gossip_core", "gossip_until", "batched_graphs",
            "GOSSIP_BACKENDS"]
@@ -99,15 +118,14 @@ class GossipResult:
         return self.x[..., 0] / np.maximum(self.x[..., 1], 1e-30)
 
 
-def _one_tick(state, t, neighbors, degrees, n_nodes, edge_hops, key, loss_p):
+def _one_tick(state, t, adj, key, loss_p):
     """Legacy tick: sample-and-apply interleaved (the parity reference).
     Sampling is shared with the presampled path (`schedule.sample_tick`)
     so the two stay draw-for-draw identical by construction."""
     x, usage, msgs, done = state
-    B = neighbors.shape[0]
+    B = adj.degrees.shape[0]
     bidx = jnp.arange(B)
-    s = sample_tick(t, key, neighbors, degrees, n_nodes, edge_hops, loss_p,
-                    x.dtype)
+    s = sample_tick(t, key, adj, loss_p, x.dtype)
     active = (~done) & s.valid
     xi = x[bidx, s.i]
     xj = x[bidx, s.j]
@@ -116,17 +134,14 @@ def _one_tick(state, t, neighbors, degrees, n_nodes, edge_hops, key, loss_p):
     upd_i = (active & s.fwd_ok & s.rep_ok)[:, None]  # i updates iff reply arrived
     x = x.at[bidx, s.j].set(jnp.where(upd_j, avg, xj))
     x = x.at[bidx, s.i].set(jnp.where(upd_i, avg, xi))
-    usage = usage.at[bidx, s.i, s.jidx].add(active.astype(jnp.int32))
+    usage = usage.at[s.pos].add(active.astype(jnp.int32))
     msgs = msgs + jnp.where(active, s.cost, 0)
     return (x, usage, msgs, done), None
 
 
 def gossip_core(
     x0,
-    neighbors,
-    degrees,
-    n_nodes,
-    edge_hops,
+    adj: CsrGraphs,
     node_mask,
     eps,
     key,
@@ -137,17 +152,25 @@ def gossip_core(
     backend: str = "lax",
     schedule: str = "presampled",
     interpret: bool = False,
+    node_shard=None,
 ):
     """Pure-JAX batched gossip loop; composable under jit and vmap.
 
-    Returns (x, usage, msgs, done, ticks).  `backend` selects the inner
-    pairwise-average kernel and `schedule` the presampled vs legacy
-    per-tick execution (see module docstring); the random exchange
-    sequence, usage, and message counts are backend- and
-    schedule-independent.  `eps` and `max_ticks` may be traced scalars
-    (the plan/execute engine passes them at runtime so eps-oracle and
-    fixed-iteration runs share one compilation); `check_every` must be
-    static (scan length).
+    Returns (x, usage, msgs, done, ticks) where usage is the flat
+    ``(nnz+1,)`` per-directed-edge counter aligned with `adj`.
+    `backend` selects the inner pairwise-average kernel and `schedule`
+    the presampled vs legacy per-tick execution (see module docstring);
+    the random exchange sequence, usage, and message counts are
+    backend- and schedule-independent.  `eps` and `max_ticks` may be
+    traced scalars (the plan/execute engine passes them at runtime so
+    eps-oracle and fixed-iteration runs share one compilation);
+    `check_every` must be static (scan length).
+
+    `node_shard=(cols, ok)` runs only the given global batch columns:
+    `x0`/`node_mask` are the local ``(Bs, C, …)`` slices, sampling stays
+    global (see module docstring), and the returned x/msgs/done/ticks
+    are local while usage stays global-flat (adds land only at the
+    shard's own edges).
     """
     if backend not in GOSSIP_BACKENDS:
         raise ValueError(f"unknown backend {backend!r}")
@@ -155,7 +178,8 @@ def gossip_core(
         raise ValueError(f"unknown schedule mode {schedule!r}")
     if schedule == "per_tick" and backend == "matmul":
         raise ValueError("backend='matmul' requires schedule='presampled'")
-    B, C, D = neighbors.shape
+    if node_shard is not None and schedule != "presampled":
+        raise ValueError("node_shard requires schedule='presampled'")
     live = node_mask.astype(x0.dtype)[..., None]  # (B, C, 1)
     denom = jnp.maximum(live.sum(1), 1.0)
     mean = (x0 * live).sum(1) / denom             # (B, V)
@@ -168,47 +192,47 @@ def gossip_core(
 
     if schedule == "per_tick":
         chunk = _per_tick_chunk(
-            neighbors, degrees, n_nodes, edge_hops, key, loss_p,
-            check_every, backend, interpret, err, tol,
+            adj, key, loss_p, check_every, backend, interpret, err, tol,
         )
     else:
         chunk = _presampled_chunk(
-            neighbors, degrees, n_nodes, edge_hops, key, loss_p,
-            check_every, backend, interpret, err, tol,
+            adj, key, loss_p, check_every, backend, interpret, err, tol,
+            node_shard,
         )
 
     def cond(carry):
         *_, done, _ticks, t0 = carry
         return (~jnp.all(done)) & (t0 < max_ticks)
 
-    usage0 = jnp.zeros((B, C, D), jnp.int32)
-    msgs0 = jnp.zeros((B,), jnp.int32)
+    usage0 = jnp.zeros(adj.nbr.shape, jnp.int32)
+    msgs0 = jnp.zeros(x0.shape[:1], jnp.int32)
     done0 = err(x0) <= tol  # already-converged graphs (e.g. 1-node cells)
-    ticks0 = jnp.zeros((B,), jnp.int32)
+    ticks0 = jnp.zeros(x0.shape[:1], jnp.int32)
     carry = (x0, usage0, msgs0, done0, ticks0, jnp.array(0, jnp.int32))
     x, usage, msgs, done, ticks, _ = jax.lax.while_loop(cond, chunk, carry)
     return x, usage, msgs, done, ticks
 
 
-def _presampled_chunk(neighbors, degrees, n_nodes, edge_hops, key, loss_p,
-                      check_every, backend, interpret, err, tol):
+def _presampled_chunk(adj, key, loss_p, check_every, backend, interpret,
+                      err, tol, node_shard=None):
     """Chunk body for the schedule/value split: one batched RNG pass for
     the whole chunk, accounting as a single scatter-add + reduction,
     then the value pass over the presampled pair list."""
     from repro.kernels.pair_apply import pair_apply, pair_apply_ref
 
-    B, C, D = neighbors.shape
-    tb = jnp.broadcast_to(jnp.arange(B)[None, :], (check_every, B))
-
     def chunk(carry):
         x, usage, msgs, done, ticks, t0 = carry
+        C = x.shape[1]
         ts = t0 + jnp.arange(check_every)
-        s = sample_schedule(ts, key, neighbors, degrees, n_nodes,
-                            edge_hops, loss_p, x.dtype)
+        s = sample_schedule(ts, key, adj, loss_p, x.dtype)
+        if node_shard is not None:
+            cols, ok = node_shard
+            s = type(s)(*(f[:, cols] for f in s))
+            s = s._replace(valid=s.valid & ok[None, :])
         active = s.valid & ~done[None, :]   # done is frozen within a chunk
         upd_j = active & s.fwd_ok
         upd_i = upd_j & s.rep_ok
-        usage = usage.at[tb, s.i, s.jidx].add(active.astype(jnp.int32))
+        usage = usage.at[s.pos].add(active.astype(jnp.int32))
         msgs = msgs + jnp.where(active, s.cost, 0).sum(0)
         if backend == "lax":
             x = pair_apply_ref(x, s.i, s.j, upd_i, upd_j)
@@ -230,14 +254,13 @@ def _presampled_chunk(neighbors, degrees, n_nodes, edge_hops, key, loss_p,
     return chunk
 
 
-def _per_tick_chunk(neighbors, degrees, n_nodes, edge_hops, key, loss_p,
-                    check_every, backend, interpret, err, tol):
+def _per_tick_chunk(adj, key, loss_p, check_every, backend, interpret,
+                    err, tol):
     """Legacy chunk body: the sequential sample-and-apply scan."""
-    B, C, D = neighbors.shape
+    B, C = adj.degrees.shape
 
     def tick(s, t):
-        return _one_tick(s, t, neighbors, degrees, n_nodes, edge_hops, key,
-                         loss_p)
+        return _one_tick(s, t, adj, key, loss_p)
 
     # historical pallas branch: the chunk's pair averages accumulate into
     # a mixing matrix (identity + row averages — _one_tick applied to
@@ -276,10 +299,7 @@ def _per_tick_chunk(neighbors, degrees, n_nodes, edge_hops, key, loss_p,
 )
 def _gossip_loop(
     x0,
-    neighbors,
-    degrees,
-    n_nodes,
-    edge_hops,
+    adj,
     node_mask,
     eps,
     key,
@@ -291,7 +311,7 @@ def _gossip_loop(
     interpret: bool = False,
 ):
     return gossip_core(
-        x0, neighbors, degrees, n_nodes, edge_hops, node_mask, eps, key,
+        x0, adj, node_mask, eps, key,
         max_ticks=max_ticks, check_every=check_every, loss_p=loss_p,
         backend=backend, schedule=schedule, interpret=interpret,
     )
@@ -324,15 +344,19 @@ def gossip_until(
     crossing (convergence detection is not free in reality either).
     `backend`/`schedule`/`interpret` select the inner pairwise-average
     kernel and execution mode (see module docstring).
+
+    The host API stays dense — ``(B, C, D)`` padded neighbors in, dense
+    `edge_usage` out; the CSR packing is internal.
     """
     x0 = np.asarray(x0)
     if x0.ndim == 2:
         x0 = x0[..., None]
     B, C, V = x0.shape
-    if edge_hops is None:
-        edge_hops = np.ones(neighbors.shape, np.int32)
+    D = neighbors.shape[2]
     if node_mask is None:
         node_mask = np.arange(C)[None, :] < np.asarray(n_nodes)[:, None]
+    adj_np = dense_to_csr(neighbors, degrees, n_nodes, edge_hops)
+    adj = CsrGraphs(*(jnp.asarray(a) for a in adj_np))
     key = jax.random.PRNGKey(seed)
     if fixed_ticks is not None:
         eps_eff = -1.0  # negative tol: the oracle never fires
@@ -342,10 +366,7 @@ def gossip_until(
         eps_eff, max_t, check = float(eps), int(max_ticks), int(check_every)
     x, usage, msgs, done, ticks = _gossip_loop(
         jnp.asarray(x0, jnp.float32),
-        jnp.asarray(neighbors, jnp.int32),
-        jnp.asarray(degrees, jnp.int32),
-        jnp.asarray(n_nodes, jnp.int32),
-        jnp.asarray(edge_hops, jnp.int32),
+        adj,
         jnp.asarray(node_mask, bool),
         jnp.asarray(eps_eff, jnp.float32),
         key,
@@ -360,7 +381,7 @@ def gossip_until(
         x=np.asarray(x),
         ticks=np.asarray(ticks),
         converged=np.asarray(done),
-        edge_usage=np.asarray(usage),
+        edge_usage=flat_usage_to_dense(np.asarray(usage), degrees, D),
         messages=np.asarray(msgs),
     )
 

@@ -25,9 +25,16 @@ exactly this reason.)  This module exploits that split:
   rounding — integer accounting (usage, cost) is schedule-only and
   stays exact.
 
+Adjacency is CSR (`CsrGraphs`): the ``(B, C, D)`` dense padded arrays
+of the historical path wasted O(B*C*D) memory on the degree spread; the
+flat layout stores one entry per directed edge (plus a single trailing
+sentinel so edgeless batches stay well-formed) and lets usage counters
+live in a flat ``(nnz+1,)`` buffer.  A sampled tick carries `pos`, the
+flat index of the drawn edge, so accounting is a 1-D scatter-add.
+
 The value half — applying the presampled pair list to ``(B, C, V)``
 cell state — lives in `repro.kernels.pair_apply` (jnp oracle + Pallas
-TPU kernel that walks the schedule in VMEM).
+TPU kernel that streams the schedule through SMEM in cell blocks).
 """
 from __future__ import annotations
 
@@ -35,13 +42,81 @@ from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 __all__ = [
+    "CsrGraphs",
     "ExchangeSchedule",
+    "dense_to_csr",
+    "flat_usage_to_dense",
     "sample_tick",
     "sample_schedule",
     "compose_schedule",
 ]
+
+
+class CsrGraphs(NamedTuple):
+    """CSR adjacency for a batch of B padded graphs.
+
+    Rows are the ``B*C`` (graph, slot) pairs in row-major order; row
+    ``(b, c)`` owns flat entries ``start[b, c] : start[b, c] +
+    degrees[b, c]``.  One trailing sentinel entry (``nbr=0, hops=1``)
+    keeps the flat arrays non-empty and gives empty rows an in-bounds
+    gather target — a draw against a zero-degree row is already marked
+    invalid by the schedule, so the garbage neighbor is never applied.
+    """
+
+    start: jax.Array    # (B, C) int32 flat offset of each row
+    nbr: jax.Array      # (nnz+1,) int32 neighbor slot within the graph
+    hops: jax.Array     # (nnz+1,) int32 per-edge routing hops
+    degrees: jax.Array  # (B, C) int32
+    n_nodes: jax.Array  # (B,) int32
+
+
+def dense_to_csr(neighbors, degrees, n_nodes, edge_hops=None) -> CsrGraphs:
+    """Pack ``(B, C, D)`` padded adjacency into a host-side `CsrGraphs`.
+
+    Entry order within a row is the dense row order (slots < degree), so
+    a jidx drawn uniformly in [0, deg) addresses the same neighbor in
+    both layouts — the CSR schedule is draw-for-draw identical to the
+    dense one.
+    """
+    neighbors = np.asarray(neighbors)
+    degrees = np.asarray(degrees, np.int32)
+    B, C, D = neighbors.shape
+    if edge_hops is None:
+        edge_hops = np.ones((B, C, D), np.int32)
+    keep = np.arange(D)[None, None, :] < degrees[:, :, None]
+    cs = np.concatenate([[0], np.cumsum(degrees.ravel(), dtype=np.int64)])
+    start = cs[:-1].reshape(B, C).astype(np.int32)
+    nbr = np.concatenate([neighbors[keep].astype(np.int32), [0]])
+    hops = np.concatenate([np.asarray(edge_hops)[keep].astype(np.int32), [1]])
+    return CsrGraphs(
+        start=start, nbr=nbr, hops=hops, degrees=degrees,
+        n_nodes=np.asarray(n_nodes, np.int32),
+    )
+
+
+def flat_usage_to_dense(usage, degrees, D=None) -> np.ndarray:
+    """Scatter flat ``(nnz+1,)`` usage counters back to ``(B, C, D)``.
+
+    The host-side inverse of the CSR layout; padding slots get 0, the
+    sentinel entry is dropped.
+    """
+    usage = np.asarray(usage)
+    degrees = np.asarray(degrees, np.int64)
+    B, C = degrees.shape
+    if D is None:
+        D = max(1, int(degrees.max(initial=0)))
+    nnz = int(degrees.sum())
+    deg_flat = degrees.ravel()
+    row = np.repeat(np.arange(B * C), deg_flat)
+    col = np.arange(nnz) - np.repeat(
+        np.concatenate([[0], np.cumsum(deg_flat)])[:-1], deg_flat
+    )
+    out = np.zeros((B * C, D), usage.dtype)
+    out[row, col] = usage[:nnz]
+    return out.reshape(B, C, D)
 
 
 class ExchangeSchedule(NamedTuple):
@@ -55,11 +130,12 @@ class ExchangeSchedule(NamedTuple):
 
     i: jax.Array       # waking node
     jidx: jax.Array    # neighbor slot drawn at i
-    j: jax.Array       # contacted node, clipped to >= 0 (see `valid`)
-    valid: jax.Array   # bool: i has neighbors and the slot is real
+    j: jax.Array       # contacted node (garbage when not `valid`)
+    valid: jax.Array   # bool: i has neighbors
     fwd_ok: jax.Array  # bool: request delivered over every hop
     rep_ok: jax.Array  # bool: reply delivered over every hop
     cost: jax.Array    # int32 single-hop transmissions if the tick is active
+    pos: jax.Array     # int32 flat CSR index of the drawn directed edge
 
 
 def truncated_failure_hops(u, p, h):
@@ -77,10 +153,7 @@ def truncated_failure_hops(u, p, h):
 def sample_tick(
     t,
     key,
-    neighbors,
-    degrees,
-    n_nodes,
-    edge_hops,
+    adj: CsrGraphs,
     loss_p: Optional[float],
     dtype=jnp.float32,
 ) -> ExchangeSchedule:
@@ -88,21 +161,26 @@ def sample_tick(
 
     This is the sampling half of the legacy per-tick scan body — ops
     and RNG consumption order are kept identical so the presampled and
-    per-tick paths are bitwise-interchangeable.
+    per-tick paths are bitwise-interchangeable.  Draws are over the
+    global batch: a node-sharded caller samples the full ``(B,)``
+    schedule and slices its columns, which keeps every shard's draws
+    bit-identical to the unsharded run (threefry streams have no prefix
+    property, so sampling only local columns would diverge).
     """
-    B, C, D = neighbors.shape
+    B, C = adj.degrees.shape
     bidx = jnp.arange(B)
     kt = jax.random.fold_in(key, t)
     ki, kj, kf, kr = jax.random.split(kt, 4)
     # pick a waking node per graph (uniform over live nodes)
     u = jax.random.uniform(ki, (B,))
-    i = jnp.minimum((u * n_nodes).astype(jnp.int32), n_nodes - 1)
-    deg_i = jnp.take_along_axis(degrees, i[:, None], axis=1)[:, 0]
+    i = jnp.minimum((u * adj.n_nodes).astype(jnp.int32), adj.n_nodes - 1)
+    deg_i = jnp.take_along_axis(adj.degrees, i[:, None], axis=1)[:, 0]
     v = jax.random.uniform(kj, (B,))
     jidx = jnp.minimum((v * deg_i).astype(jnp.int32), jnp.maximum(deg_i - 1, 0))
-    j = neighbors[bidx, i, jidx]
-    valid = (deg_i > 0) & (j >= 0)
-    hops = edge_hops[bidx, i, jidx]
+    pos = adj.start[bidx, i] + jidx
+    j = adj.nbr[pos]
+    valid = deg_i > 0  # compact rows: deg>0 iff the slot holds a real edge
+    hops = adj.hops[pos]
 
     if loss_p is None:
         fwd_ok = jnp.ones((B,), bool)
@@ -118,18 +196,15 @@ def sample_tick(
         )
         cost = fwd_hops + jnp.where(fwd_ok, rep_hops, 0)
     return ExchangeSchedule(
-        i=i, jidx=jidx, j=jnp.maximum(j, 0), valid=valid,
-        fwd_ok=fwd_ok, rep_ok=rep_ok, cost=cost,
+        i=i, jidx=jidx, j=j, valid=valid,
+        fwd_ok=fwd_ok, rep_ok=rep_ok, cost=cost, pos=pos,
     )
 
 
 def sample_schedule(
     ts,
     key,
-    neighbors,
-    degrees,
-    n_nodes,
-    edge_hops,
+    adj: CsrGraphs,
     loss_p: Optional[float],
     dtype=jnp.float32,
 ) -> ExchangeSchedule:
@@ -137,9 +212,7 @@ def sample_schedule(
     `ts` producing an `ExchangeSchedule` with leading axis len(ts)."""
 
     def one(t):
-        return sample_tick(
-            t, key, neighbors, degrees, n_nodes, edge_hops, loss_p, dtype
-        )
+        return sample_tick(t, key, adj, loss_p, dtype)
 
     return jax.vmap(one)(ts)
 

@@ -73,7 +73,7 @@ def _level_exchange_cost(lp) -> int:
     2 per base edge, 2*hops per overlay edge."""
     if lp.kind == "cells":
         return int(lp.degrees.sum())  # = 2 * #edges
-    hops = lp.edge_hops[lp.edge_b, lp.edge_i, lp.edge_si]
+    hops = lp.hop_flat[lp.edge_pos_i]
     return int(2 * hops.sum())
 
 

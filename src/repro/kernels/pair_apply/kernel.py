@@ -2,22 +2,28 @@
 
 The simulation hot path applies a `check_every`-tick presampled pair
 list to the (B, C, V) cell state.  Doing that with XLA scatters keeps
-the state in HBM and round-trips it twice per tick; here each cell's
-state is loaded into VMEM once per kernel call and the whole schedule
-is walked on-chip — two dynamic row slices, one VPU average, and two
-dynamic row updates per tick, with the final state written back once.
+the state in HBM and round-trips it twice per tick; here cell state is
+loaded into VMEM once per kernel call and the whole schedule is walked
+on-chip — two dynamic row slices, one VPU average, and two dynamic row
+updates per tick, with the final state written back once.
 
-The schedule (i, j, update flags, shaped (B, T)) rides in as scalar
-prefetch so it lands in SMEM, where the loop's dynamic row indices
-must live on TPU.
+State residence is TILED: the grid runs over blocks of `block_b` cells,
+so only one ``(block_b, C_pad, V_pad)`` state block and its
+``(block_b, T)`` schedule slice are resident at a time — large-n levels
+(tens of thousands of cells) stream through VMEM instead of assuming
+the whole batch fits.  The schedule rides in as blocked SMEM inputs
+(NOT whole-array scalar prefetch, which would have to hold all ``B*T``
+indices in SMEM at once and overflows at large B); the loop's dynamic
+row indices must live in SMEM on TPU.
 
-Per-program VMEM working set: x/y (C_pad, V_pad) f32 each — the
-hierarchy's per-cell matrices are tiny (C up to a few dozen, padded to
-8 sublanes x 128 lanes), far inside the ~16 MiB v5e budget.
+Per-program working set: ``block_b * C_pad * V_pad * 4`` bytes of VMEM
+for each of x/out plus ``4 * block_b * T`` int32 SMEM words — the
+caller (ops.pair_apply) sizes `block_b` to keep both far inside budget.
 
-Arithmetic is the exact f32 op sequence of the jnp oracle
-(`ref.pair_apply_ref`), so the kernel is bitwise-interchangeable with
-the lax backend rather than merely allclose.
+Arithmetic per cell is the exact f32 op sequence of the jnp oracle
+(`ref.pair_apply_ref`) and cells never interact, so the kernel is
+bitwise-interchangeable with the lax backend for every block size
+rather than merely allclose.
 """
 from __future__ import annotations
 
@@ -31,29 +37,40 @@ from jax.experimental.pallas import tpu as pltpu
 __all__ = ["pair_apply_pallas"]
 
 
-def _pair_apply_kernel(i_ref, j_ref, ui_ref, uj_ref, x_ref, o_ref, *, ticks: int):
-    b = pl.program_id(0)
-    x = x_ref[0].astype(jnp.float32)      # (C_pad, V_pad)
+def _pair_apply_kernel(
+    i_ref, j_ref, ui_ref, uj_ref, x_ref, o_ref, *, ticks: int, cells: int
+):
+    def cell_body(l, _):
+        x0 = pl.load(
+            x_ref, (pl.dslice(l, 1), slice(None), slice(None))
+        )[0].astype(jnp.float32)                 # (C_pad, V_pad)
 
-    def body(t, x):
-        it = i_ref[b, t]
-        jt = j_ref[b, t]
-        xi = jax.lax.dynamic_slice_in_dim(x, it, 1, 0)   # (1, V_pad)
-        xj = jax.lax.dynamic_slice_in_dim(x, jt, 1, 0)
-        avg = 0.5 * (xi + xj)
-        # partner row first, then initiator — the oracle's write order
-        x = jax.lax.dynamic_update_slice_in_dim(
-            x, jnp.where(uj_ref[b, t] > 0, avg, xj), jt, 0
+        def body(t, x):
+            it = i_ref[l, t]
+            jt = j_ref[l, t]
+            xi = jax.lax.dynamic_slice_in_dim(x, it, 1, 0)   # (1, V_pad)
+            xj = jax.lax.dynamic_slice_in_dim(x, jt, 1, 0)
+            avg = 0.5 * (xi + xj)
+            # partner row first, then initiator — the oracle's write order
+            x = jax.lax.dynamic_update_slice_in_dim(
+                x, jnp.where(uj_ref[l, t] > 0, avg, xj), jt, 0
+            )
+            x = jax.lax.dynamic_update_slice_in_dim(
+                x, jnp.where(ui_ref[l, t] > 0, avg, xi), it, 0
+            )
+            return x
+
+        y = jax.lax.fori_loop(0, ticks, body, x0)
+        pl.store(
+            o_ref, (pl.dslice(l, 1), slice(None), slice(None)),
+            y[None].astype(o_ref.dtype),
         )
-        x = jax.lax.dynamic_update_slice_in_dim(
-            x, jnp.where(ui_ref[b, t] > 0, avg, xi), it, 0
-        )
-        return x
+        return 0
 
-    o_ref[0] = jax.lax.fori_loop(0, ticks, body, x).astype(o_ref.dtype)
+    jax.lax.fori_loop(0, cells, cell_body, 0)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
 def pair_apply_pallas(
     x: jax.Array,
     i: jax.Array,
@@ -61,26 +78,33 @@ def pair_apply_pallas(
     upd_i: jax.Array,
     upd_j: jax.Array,
     *,
+    block_b: int,
     interpret: bool = False,
 ) -> jax.Array:
-    """Apply a (B, T) presampled schedule to (B, C_pad, V_pad) state.
+    """Apply a (B, T) presampled schedule to (B, C_pad, V_pad) state,
+    `block_b` cells per grid step.
 
     The caller (ops.pair_apply) is responsible for MXU/lane alignment
-    (C_pad multiple of 8, V_pad multiple of 128) and for transposing
-    the schedule to graph-major (B, T) int32.
+    (C_pad multiple of 8, V_pad multiple of 128), for padding B up to a
+    `block_b` multiple (padded cells carry an all-masked schedule, so
+    their rows pass through untouched), and for transposing the
+    schedule to graph-major (B, T) int32.
     """
     B, C, V = x.shape
     T = i.shape[1]
     assert i.shape == j.shape == upd_i.shape == upd_j.shape == (B, T)
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=4,
-        grid=(B,),
-        in_specs=[pl.BlockSpec((1, C, V), lambda b, *_: (b, 0, 0))],
-        out_specs=pl.BlockSpec((1, C, V), lambda b, *_: (b, 0, 0)),
+    assert B % block_b == 0, (B, block_b)
+    sched_spec = pl.BlockSpec(
+        (block_b, T), lambda g: (g, 0), memory_space=pltpu.SMEM
     )
     return pl.pallas_call(
-        functools.partial(_pair_apply_kernel, ticks=T),
-        grid_spec=grid_spec,
+        functools.partial(_pair_apply_kernel, ticks=T, cells=block_b),
+        grid=(B // block_b,),
+        in_specs=[
+            sched_spec, sched_spec, sched_spec, sched_spec,
+            pl.BlockSpec((block_b, C, V), lambda g: (g, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, C, V), lambda g: (g, 0, 0)),
         out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
         interpret=interpret,
     )(i, j, upd_i, upd_j, x)

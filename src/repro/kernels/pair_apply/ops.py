@@ -1,15 +1,24 @@
 """Public op for applying presampled gossip schedules: alignment
-padding, schedule layout, and the Pallas-vs-oracle dispatch.
+padding, cell-block tiling, schedule layout, and the Pallas-vs-oracle
+dispatch.
 
 `use_pallas=False` (or any non-TPU engine run) takes the jnp oracle —
 the same scan the lax backend uses, bitwise-identical to the kernel's
 f32 op sequence, so backend choice never changes simulation results.
 The Pallas kernel itself is validated in interpret mode by the kernel
 tests and runs for real only on TPU hosts.
+
+`block_b` controls how many cells are resident per grid step (see
+kernel.py).  The default sizes the block so the state tile stays
+within ~512 KiB of VMEM and the four schedule tiles within ~128 KiB of
+SMEM — large-n levels stream through in blocks, tiny fig3-scale levels
+still run as a single block.  Results are bitwise-independent of the
+block size (cells never interact).
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -19,12 +28,23 @@ from .ref import pair_apply_ref
 
 __all__ = ["pair_apply"]
 
+_VMEM_BLOCK_BYTES = 512 * 1024
+_SMEM_BLOCK_BYTES = 128 * 1024
+
 
 def _round_up(v: int, mult: int) -> int:
     return ((v + mult - 1) // mult) * mult
 
 
-@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def _auto_block(B: int, Cp: int, Vp: int, T: int) -> int:
+    vmem_cap = max(1, _VMEM_BLOCK_BYTES // (Cp * Vp * 4))
+    smem_cap = max(1, _SMEM_BLOCK_BYTES // (4 * T * 4))
+    return max(1, min(B, vmem_cap, smem_cap))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("use_pallas", "interpret", "block_b")
+)
 def pair_apply(
     x: jax.Array,
     i: jax.Array,
@@ -34,24 +54,31 @@ def pair_apply(
     *,
     use_pallas: bool = True,
     interpret: bool = False,
+    block_b: Optional[int] = None,
 ) -> jax.Array:
     """Walk a (T, B) presampled exchange schedule over (B, C, V) state.
 
     See `ref.pair_apply_ref` for argument semantics.  Inputs may be
     unaligned; the Pallas path pads C to 8 sublanes / V to 128 lanes,
-    transposes the schedule to graph-major SMEM layout, and crops the
-    result back.
+    pads B up to a `block_b` multiple (padded cells get an all-masked
+    schedule, i.e. pure pass-through), transposes the schedule to
+    graph-major SMEM layout, and crops the result back.
     """
     if not use_pallas:
         return pair_apply_ref(x, i, j, upd_i, upd_j)
     B, C, V = x.shape
+    T = i.shape[0]
     Cp, Vp = _round_up(C, 8), _round_up(V, 128)
-    xp = jnp.pad(x, ((0, 0), (0, Cp - C), (0, Vp - V)))
-    sched = (
-        i.T.astype(jnp.int32),
-        j.T.astype(jnp.int32),
-        upd_i.T.astype(jnp.int32),
-        upd_j.T.astype(jnp.int32),
+    bb = block_b if block_b is not None else _auto_block(B, Cp, Vp, T)
+    bb = max(1, min(bb, B))
+    Bp = _round_up(B, bb)
+    xp = jnp.pad(x, ((0, Bp - B), (0, Cp - C), (0, Vp - V)))
+
+    def prep(a):  # (T, B) -> graph-major (Bp, T) int32
+        return jnp.pad(a.astype(jnp.int32), ((0, 0), (0, Bp - B))).T
+
+    y = pair_apply_pallas(
+        xp, prep(i), prep(j), prep(upd_i), prep(upd_j),
+        block_b=bb, interpret=interpret,
     )
-    y = pair_apply_pallas(xp, *sched, interpret=interpret)
-    return y[:, :C, :V]
+    return y[:B, :C, :V]

@@ -36,6 +36,7 @@ SLOW_TESTS = {
     "test_pallas_backend_matches_lax",
     "test_engine_matmul_backend",
     "test_engine_single_device_mesh_matches_unsharded",
+    "test_plan_methods_execute_identically",
 }
 
 

@@ -243,3 +243,53 @@ def test_trial_mesh_sharding_matches_unsharded():
     print("TRIAL MESH OK")
     """)
     assert "TRIAL MESH OK" in out
+
+
+def test_node_mesh_2d_matches_trial_mesh():
+    """The (trials, nodes) 2-D mesh blocks every level's graph batch
+    over the nodes axis (halo exchange only at promotion boundaries);
+    results must be bitwise-equal to both the unsharded run and the
+    1-axis trial mesh, in the eps-oracle AND fixed-iterations modes."""
+    out = _run("""
+    from jax.sharding import Mesh
+    from repro.core import build_plan, execute_plan, random_geometric_graph
+
+    g = random_geometric_graph(200, seed=11)
+    x0 = np.random.default_rng(6).normal(0, 1, 200)
+    plan = build_plan(g, seed=0)
+    devs = np.array(jax.devices())
+    mesh2d = Mesh(devs.reshape(2, 4), ("trials", "nodes"))
+    mesh1d = Mesh(devs, ("trials",))
+    for kw in (dict(eps=1e-4), dict(eps=1e-3, fixed_ticks_scale=1.0)):
+        seeds = (0, 1, 2)  # 3 trials on a 2-way trial axis: forces padding
+        node = execute_plan(
+            plan, x0, seeds=seeds, weighted=True, mesh=mesh2d, **kw)
+        trial = execute_plan(
+            plan, x0, seeds=seeds, weighted=True, mesh=mesh1d, **kw)
+        dense = execute_plan(plan, x0, seeds=seeds, weighted=True, **kw)
+        for other in (trial, dense):
+            np.testing.assert_array_equal(node.x_final, other.x_final)
+            np.testing.assert_array_equal(node.messages, other.messages)
+            np.testing.assert_array_equal(node.node_sends, other.node_sends)
+            np.testing.assert_array_equal(
+                node.level_ticks, other.level_ticks)
+            np.testing.assert_array_equal(
+                node.level_messages, other.level_messages)
+        print("NODE MESH OK", kw["eps"])
+
+    # guardrails: the node-sharded path is presampled-only and cannot
+    # collect per-edge usage (counters live sharded)
+    try:
+        execute_plan(plan, x0, seeds=(0,), mesh=mesh2d, schedule="per_tick")
+        raise AssertionError("per_tick + node mesh must be rejected")
+    except ValueError:
+        pass
+    try:
+        execute_plan(plan, x0, seeds=(0,), mesh=mesh2d, collect_usage=True)
+        raise AssertionError("collect_usage + node mesh must be rejected")
+    except ValueError:
+        pass
+    print("NODE MESH GUARDS OK")
+    """)
+    assert out.count("NODE MESH OK") == 2
+    assert "NODE MESH GUARDS OK" in out

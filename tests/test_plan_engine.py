@@ -104,9 +104,9 @@ def test_csr_attribution_matches_legacy_dict(rgg500, x0_500):
     for li, lp in enumerate(plan.levels):
         if lp.kind != "overlay":
             continue
-        usage = res.edge_usage[li][0]
+        usage = res.edge_usage[li][0]          # flat (nnz+1,) counters
         csr = overlay_node_sends(lp, usage, 500)
-        legacy = _legacy_overlay_sends(lp, usage, 500)
+        legacy = _legacy_overlay_sends(lp, lp.dense_usage(usage), 500)
         np.testing.assert_array_equal(csr, legacy)
         overlay_total += csr
         checked += 1
@@ -114,7 +114,7 @@ def test_csr_attribution_matches_legacy_dict(rgg500, x0_500):
     # full-run cross-check: engine node_sends == overlay CSR + base-level
     # (initiator+partner) counts + the dissemination send
     base = plan.levels[0]
-    usage0 = res.edge_usage[0][0]
+    usage0 = base.dense_usage(res.edge_usage[0][0])
     base_sends = np.zeros(500, np.int64)
     for b in range(base.num_graphs):
         ids = base.slot_node[b][base.slot_node[b] >= 0]

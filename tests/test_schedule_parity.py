@@ -128,16 +128,18 @@ def test_sample_schedule_matches_sample_tick():
     import jax
     import jax.numpy as jnp
 
+    from repro.core import CsrGraphs, dense_to_csr
+
     g = _ring(16)
     key = jax.random.PRNGKey(4)
-    nb = jnp.asarray(g.neighbors[None])
-    dg = jnp.asarray(g.degrees[None])
-    nn = jnp.asarray([16], jnp.int32)
-    eh = jnp.ones((1, 16, 2), jnp.int32)
+    adj_np = dense_to_csr(
+        g.neighbors[None], g.degrees[None], np.array([16], np.int32)
+    )
+    adj = CsrGraphs(*(jnp.asarray(a) for a in adj_np))
     ts = jnp.arange(10, 42)
-    sched = sample_schedule(ts, key, nb, dg, nn, eh, 0.7)
+    sched = sample_schedule(ts, key, adj, 0.7)
     for idx, t in enumerate(np.asarray(ts)):
-        one = sample_tick(jnp.int32(t), key, nb, dg, nn, eh, 0.7)
+        one = sample_tick(jnp.int32(t), key, adj, 0.7)
         for field, batch in zip(one._fields, sched):
             np.testing.assert_array_equal(
                 np.asarray(batch[idx]), np.asarray(getattr(one, field)),
@@ -180,6 +182,28 @@ def test_pair_apply_kernel_bitwise_vs_oracle(B, C, V, T):
     uj = jnp.asarray(rng.uniform(size=(T, B)) < 0.9)
     want = pair_apply_ref(x, i, j, ui, uj)
     got = pair_apply(x, i, j, ui, uj, use_pallas=True, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("block_b", [1, 2, 3, 4])
+@pytest.mark.parametrize("B,C,V,T", [(7, 5, 1, 32), (16, 9, 2, 48)])
+def test_pair_apply_tiled_bitwise_any_block(B, C, V, T, block_b):
+    """Tiling must be invisible: every block size — including blocks
+    smaller than the batch and batches that are NOT a block multiple
+    (ops pads with all-masked pass-through schedules) — reproduces the
+    oracle bitwise, because cells never interact."""
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(B * T + block_b)
+    x = jnp.asarray(rng.normal(size=(B, C, V)), jnp.float32)
+    i = jnp.asarray(rng.integers(0, C, (T, B)), jnp.int32)
+    j = jnp.asarray(rng.integers(0, C, (T, B)), jnp.int32)
+    ui = jnp.asarray(rng.uniform(size=(T, B)) < 0.8)
+    uj = jnp.asarray(rng.uniform(size=(T, B)) < 0.9)
+    want = pair_apply_ref(x, i, j, ui, uj)
+    got = pair_apply(
+        x, i, j, ui, uj, use_pallas=True, interpret=True, block_b=block_b
+    )
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 

@@ -37,6 +37,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 COMMITTED = "fig2_levels"
 SCRATCH = "fig2_levels_check"
 FIG3_BACKENDS = ("lax", "pallas")
+LARGE_N = "large_n_smoke"
 
 
 def check_fig3(tolerance: float) -> list[str]:
@@ -89,6 +90,54 @@ def check_fig3(tolerance: float) -> list[str]:
     return failures
 
 
+def check_large_n(tolerance: float) -> list[str]:
+    """Gate the large-n CSR-path smoke (n=20k FI run) message count.
+
+    Re-runs `benchmarks.large_n --smoke` at the committed artifact's
+    exact profile into a scratch artifact and compares total messages.
+    The run itself also re-asserts the reference-vs-vectorized overlap
+    parity at n=2000, so plan-builder drift fails here too.
+    """
+    from benchmarks import large_n
+    from benchmarks.common import load_artifact
+
+    committed = load_artifact(LARGE_N)
+    if committed is None:
+        return [
+            f"  {LARGE_N}: committed artifact benchmarks/artifacts/"
+            f"{LARGE_N}.json is missing; run "
+            f"`python -m benchmarks.large_n --smoke` and commit the result"
+        ]
+    overlap_n = int((committed.get("overlap") or {}).get("n", 2000))
+    print(f"check_artifacts: re-running large-n smoke "
+          f"(n={committed['n']}, scale={committed['fixed_ticks_scale']}, "
+          f"backend={committed['backend']}, overlap_n={overlap_n}) against "
+          f"{LARGE_N} (tolerance ±{tolerance:.0%})")
+    try:
+        large_n.run(
+            n=int(committed["n"]), overlap_n=overlap_n,
+            trials=int(committed["trials"]), eps=float(committed["eps"]),
+            fixed_ticks_scale=float(committed["fixed_ticks_scale"]),
+            backend=committed["backend"], artifact=f"{LARGE_N}_check",
+        )
+    except SystemExit as e:  # overlap-parity failure inside the benchmark
+        return [f"  {LARGE_N}: {e}"]
+    fresh = load_artifact(f"{LARGE_N}_check")
+    failures = []
+    want = float(committed["messages"][0])
+    got = float(fresh["messages"][0])
+    rel = abs(got - want) / max(want, 1.0)
+    status = "ok" if rel <= tolerance else "DRIFT"
+    print(f"  large_n@n{committed['n']}: committed={want:.0f} "
+          f"fresh={got:.0f} rel={rel:+.1%} [{status}]")
+    if rel > tolerance:
+        failures.append(
+            f"  {LARGE_N}@n{committed['n']}: messages drifted {rel:.1%} "
+            f"(committed {want:.0f} -> fresh {got:.0f}, "
+            f"tolerance {tolerance:.0%})")
+    return failures
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--tolerance", type=float, default=0.15,
@@ -98,10 +147,29 @@ def main() -> int:
                          "to 3, the committed profile)")
     ap.add_argument("--skip-fig3", action="store_true",
                     help="gate only the fig2 artifact")
+    ap.add_argument("--large-n", action="store_true",
+                    help="also gate the large-n smoke (n=20k FI run; "
+                         "slower, run under REPRO_BENCH_SMOKE=1)")
+    ap.add_argument("--large-n-only", action="store_true",
+                    help="gate ONLY the large-n smoke")
     args = ap.parse_args()
 
     from benchmarks import fig2_levels
     from benchmarks.common import load_artifact
+
+    if args.large_n_only:
+        failures = check_large_n(args.tolerance)
+        if failures:
+            print("check_artifacts: FAIL — large-n smoke drifted from the "
+                  "committed artifact:")
+            print("\n".join(failures))
+            print("If the drift is intentional (algorithm change), "
+                  "regenerate and commit: python -m benchmarks.large_n "
+                  "--smoke")
+            return 1
+        print(f"check_artifacts: OK — large-n smoke within "
+              f"±{args.tolerance:.0%} of the committed artifact")
+        return 0
 
     committed = load_artifact(COMMITTED)
     if committed is None:
@@ -143,6 +211,8 @@ def main() -> int:
 
     if not args.skip_fig3:
         failures += check_fig3(args.tolerance)
+    if args.large_n:
+        failures += check_large_n(args.tolerance)
 
     if failures:
         print("check_artifacts: FAIL — per-algorithm message counts drifted "

@@ -10,7 +10,14 @@
 #   tools/ci.sh --no-bench          # tests only
 #   tools/ci.sh --bench-only        # gate + smokes only (CI job 2: the
 #                                   #   tier1 job already ran the tests)
-#   REPRO_BENCH_SMOKE=1 tools/ci.sh # + fig3 device-resident smoke
+#   REPRO_BENCH_SMOKE=1 tools/ci.sh # + large-n CSR-path smoke gate
+#                                   #   (tools/check_artifacts.py
+#                                   #   --large-n-only: n=20k FI re-run
+#                                   #   ±15% vs the committed
+#                                   #   large_n_smoke artifact, incl.
+#                                   #   the reference-vs-vectorized
+#                                   #   plan-builder overlap parity)
+#                                   # + fig3 device-resident smoke
 #                                   #   (n=500, trials=1, both engine
 #                                   #   backends — backend-suffixed
 #                                   #   artifacts so the pallas run does
@@ -57,6 +64,8 @@ if [[ "${REPRO_BENCH_SMOKE:-0}" == "1" ]]; then
     echo "== benchmark smoke (fig3 n=500 trials=1, backend=pallas) =="
     python -m benchmarks.fig3_vs_path_averaging --sizes 500 --trials 1 \
         --backend pallas --artifact fig3_smoke_pallas
+    echo "== large-n smoke gate (n=20k FI, CSR path, ±15% vs committed) =="
+    python tools/check_artifacts.py --large-n-only
     echo "== gossip perf trajectory (BENCH_gossip.json) =="
     python -m benchmarks.gossip_trajectory --label "ci smoke"
     echo "== compressed decentralized-train smoke (R=8, topk, multiscale) =="

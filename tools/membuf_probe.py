@@ -1,29 +1,111 @@
-"""Dry-run memory profiler: compile a (reduced-depth) cell and list the
-largest per-device HLO buffers — the working tool behind the §Perf
-memory iterations.
+"""Memory probes: gossip plan+execute footprint and the model-cell
+HLO-buffer dry run.
+
+Gossip mode (importable; used by the large-n benchmark smoke) reports
+the peak host RSS and live device-buffer bytes for building and
+executing a `HierarchyPlan` at a given n:
+
+  PYTHONPATH=src python tools/membuf_probe.py --gossip-n 100000
+
+Model mode compiles a (reduced-depth) cell and lists the largest
+per-device HLO buffers — the working tool behind the §Perf memory
+iterations.  It forces a 512-device host platform, so it runs as a
+fresh process only (never import-triggered):
 
   PYTHONPATH=src python tools/membuf_probe.py --arch grok-1-314b \
       --shape train_4k --unit "attn" --layers 1 [--top 15]
 """
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+from __future__ import annotations
 
 import argparse
-import dataclasses
 import re
-from collections import Counter
-
-import jax
-
-from repro.configs import get_config
-from repro.launch.hlo_analysis import DTYPE_BYTES
-from repro.launch.mesh import make_production_mesh, set_mesh
-from repro.launch.specs import build_cell
+import sys
 
 SHAPE_RE = re.compile(r"^\s*%?\S+ = ([a-z0-9]+)\[([\d,]+)\]")
 
 
+# --------------------------- gossip probes -----------------------------
+
+
+def host_peak_rss_bytes() -> int:
+    """Peak resident set size of this process so far, in bytes.
+
+    `ru_maxrss` is KiB on Linux and bytes on macOS; normalize to bytes.
+    """
+    import resource
+
+    peak = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+    if sys.platform != "darwin":
+        peak *= 1024
+    return int(peak)
+
+
+def device_live_bytes() -> int:
+    """Total bytes of live (committed) jax device buffers right now."""
+    import jax
+
+    return int(sum(int(a.nbytes) for a in jax.live_arrays()))
+
+
+def memory_report() -> dict:
+    """Snapshot both probes — call after the work being measured."""
+    return {
+        "host_peak_rss_bytes": host_peak_rss_bytes(),
+        "device_live_bytes": device_live_bytes(),
+    }
+
+
+def gossip_memory_report(
+    n: int,
+    *,
+    seed: int = 0,
+    eps: float = 1e-3,
+    fixed_ticks_scale: float = 0.2,
+    trials: int = 1,
+    backend: str = "lax",
+    method: str = "vectorized",
+) -> dict:
+    """Build and execute a multiscale plan at size `n`, reporting the
+    peak host RSS and live device-buffer bytes alongside the
+    `build_seconds` breakdown.  Defaults mirror the large-n benchmark
+    profile (fixed-iterations mode, lax backend, one trial).
+    """
+    import numpy as np
+
+    from repro.core import build_plan, execute_plan, random_geometric_graph
+
+    g = random_geometric_graph(n, seed=1000 + n)
+    x0 = np.random.default_rng(n).normal(0, 1, n)
+    plan = build_plan(g, seed=seed, method=method)
+    res = execute_plan(
+        plan, x0, eps=eps, seeds=tuple(seed + t for t in range(trials)),
+        weighted=True, fixed_ticks_scale=fixed_ticks_scale, backend=backend,
+    )
+    report = memory_report()
+    report.update(
+        n=int(n),
+        levels=len(plan.levels),
+        plan_build_s=dict(plan.build_seconds or {}),
+        messages=[int(m) for m in np.asarray(res.messages)],
+        err=[float(e) for e in np.atleast_1d(res.error(x0))],
+    )
+    return report
+
+
+# ---------------------------- model probe ------------------------------
+
+
 def probe(arch, shape, unit=None, layers=None, top=15, multi_pod=False):
+    import dataclasses
+    from collections import Counter
+
+    import jax
+
+    from repro.configs import get_config
+    from repro.launch.hlo_analysis import DTYPE_BYTES
+    from repro.launch.mesh import make_production_mesh, set_mesh
+    from repro.launch.specs import build_cell
+
     mesh = make_production_mesh(multi_pod=multi_pod)
     cfg = get_config(arch)
     changes = {}
@@ -77,11 +159,36 @@ def probe(arch, shape, unit=None, layers=None, top=15, multi_pod=False):
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--gossip-n", type=int, default=None,
+                    help="probe the gossip plan+execute path at this n "
+                         "instead of compiling a model cell")
+    ap.add_argument("--scale", type=float, default=0.2,
+                    help="fixed_ticks_scale for the gossip probe")
+    ap.add_argument("--arch", default=None)
     ap.add_argument("--shape", default="train_4k")
     ap.add_argument("--unit", default=None)
     ap.add_argument("--layers", type=int, default=None)
     ap.add_argument("--top", type=int, default=15)
     ap.add_argument("--multi-pod", action="store_true")
     a = ap.parse_args()
-    probe(a.arch, a.shape, a.unit, a.layers, a.top, a.multi_pod)
+    if a.gossip_n is not None:
+        import json
+
+        rep = gossip_memory_report(a.gossip_n, fixed_ticks_scale=a.scale)
+        rss = rep["host_peak_rss_bytes"] / 2**30
+        dev = rep["device_live_bytes"] / 2**20
+        print(f"gossip n={a.gossip_n}: peak_rss={rss:.2f}GiB "
+              f"device_live={dev:.1f}MiB "
+              f"build={rep['plan_build_s'].get('total', 0.0):.2f}s")
+        print(json.dumps(rep, indent=1))
+    else:
+        if a.arch is None:
+            ap.error("--arch is required without --gossip-n")
+        # the model probe compiles against a production-sized mesh;
+        # the 512-device host forcing must precede the first jax import
+        import os
+
+        os.environ["XLA_FLAGS"] = (
+            "--xla_force_host_platform_device_count=512"
+        )
+        probe(a.arch, a.shape, a.unit, a.layers, a.top, a.multi_pod)
