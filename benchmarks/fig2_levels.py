@@ -8,18 +8,20 @@ import numpy as np
 
 from repro.core import build_plan, multiscale_gossip, random_geometric_graph
 
-from .common import csv_line, save_artifact
+from .common import csv_line, save_artifact, timed
 
 
 def run(n: int = 2000, trials: int = 3, eps: float = 1e-4,
         max_k: int = 6, artifact: str = "fig2_levels") -> list[str]:
     rows = {}
     plan_build_s: dict = {}
+    graph_gen: list[float] = []
     t0 = time.time()
     for k in range(2, max_k + 1):
         msgs, errs, builds = [], [], []
         for t in range(trials):
-            g = random_geometric_graph(n, seed=100 + t)
+            g, g_dt = timed(random_geometric_graph, n, seed=100 + t)
+            graph_gen.append(g_dt)
             x0 = np.random.default_rng(t).normal(0, 1, n)
             # the plan multiscale_gossip would build internally, made
             # explicit so its build_seconds breakdown can be recorded
@@ -41,7 +43,8 @@ def run(n: int = 2000, trials: int = 3, eps: float = 1e-4,
         }
     save_artifact(
         artifact,
-        {"n": n, "eps": eps, "rows": rows, "plan_build_s": plan_build_s},
+        {"n": n, "eps": eps, "rows": rows, "plan_build_s": plan_build_s,
+         "graph_gen_s": float(np.mean(graph_gen))},
     )
     total_us = (time.time() - t0) * 1e6
     out = []

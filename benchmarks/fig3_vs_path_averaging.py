@@ -54,6 +54,7 @@ def run(sizes=(500, 1000, 2000, 4000, 8000), trials: int = 3,
     table: dict = {a: {} for a in algo_names}
     timing: dict = {a: 0.0 for a in algo_names}
     plan_build_s: dict = {}
+    graph_gen_s: dict = {}
     warmup_s = _warm_jit(backend)
 
     def record(name, n, res, x0, dt):
@@ -65,7 +66,8 @@ def run(sizes=(500, 1000, 2000, 4000, 8000), trials: int = 3,
         ]
 
     for n in sizes:
-        g = random_geometric_graph(n, seed=1000 + n)
+        g, g_dt = timed(random_geometric_graph, n, seed=1000 + n)
+        graph_gen_s[int(n)] = float(g_dt)
         x0 = np.stack([
             np.random.default_rng(n + t).normal(0, 1, n) for t in range(trials)
         ])
@@ -140,6 +142,7 @@ def run(sizes=(500, 1000, 2000, 4000, 8000), trials: int = 3,
             "graph_seeds": {int(n): 1000 + int(n) for n in sizes},
             "jit_warmup_s": float(warmup_s),
             "wall_clock_s": {k: float(v) for k, v in timing.items()},
+            "graph_gen_s": graph_gen_s,
             "plan_build_s": plan_build_s,
             "summary": summary,
             "scaling_exponent": fits,

@@ -138,7 +138,10 @@ def build_entry(label: str = "", kernels: bool = True) -> dict:
             "messages": art["messages"],
             "err": art["err"],
             "wall_clock_s": art["wall_clock_s"],
+            "graph_gen_s": art.get("graph_gen_s"),
             "plan_build_s": art["plan_build_s"],
+            "workers": art.get("workers"),
+            "setup": art.get("setup"),
             "memory": art["memory"],
             "overlap_ratio": (art.get("overlap") or {}).get("ratio"),
         }
@@ -167,10 +170,18 @@ def run(label: str = "", kernels: bool = True) -> list[str]:
             f"msgs={rec['messages_mean'].get('multiscale', 0):.0f}",
         ))
     for name, rec in entry.get("large_n", {}).items():
+        setup = rec.get("setup") or {}
+        setup_note = (
+            f"setup_cold={setup['cold_s']:.2f}s "
+            f"setup_warm={setup['warm_s']:.3f}s "
+            if setup else ""
+        )
         lines.append(csv_line(
             f"gossip/{name}", rec["wall_clock_s"]["execute_cold"] * 1e6,
             f"n={rec['n']} msgs={rec['messages'][0]} "
+            f"graph={rec.get('graph_gen_s') or 0.0:.2f}s "
             f"plan={rec['plan_build_s'].get('total', 0.0):.2f}s "
+            f"{setup_note}"
             f"warm={rec['wall_clock_s']['execute_warm']:.2f}s",
         ))
     for key, us in entry.get("pair_apply_us", {}).items():

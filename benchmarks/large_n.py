@@ -13,11 +13,16 @@ Two parts:
    not noise.
 
 2. **Large-n run** — one fixed-iterations (FI) trial at `n` through the
-   vectorized builder and the lax presampled engine: graph build, plan
-   build (with the per-stage `build_seconds` breakdown), cold execute
-   (includes compile) and warm execute wall-clocks, total messages and
-   final error, plus the peak host RSS / live device-buffer bytes from
-   `tools.membuf_probe`.
+   vectorized builder and the lax presampled engine: cold setup (graph
+   generation via the streamed bucket builder + plan build, with the
+   per-stage `build_seconds` breakdown, forced with `refresh=True`),
+   warm setup (a content-addressed plan-cache hit via
+   `core.plan_cache.setup_plan` — the acceptance bar is warm < 5% of
+   cold), cold execute (includes compile) and warm execute wall-clocks,
+   total messages and final error, plus the peak host RSS / live
+   device-buffer bytes from `tools.membuf_probe`.  `--workers N` shards
+   plan construction over a fork pool (bitwise-identical output; a
+   wall-clock lever on multi-core hosts only).
 
 The FI profile (eps sentinel off, `fixed_ticks_scale=0.2`) is the
 large-n configuration of record: convergence detection at 10^6 nodes
@@ -40,6 +45,7 @@ import sys
 import numpy as np
 
 from repro.core import build_plan, execute_plan, random_geometric_graph
+from repro.core.plan_cache import setup_plan
 
 from .common import csv_line, save_artifact, timed
 
@@ -82,19 +88,43 @@ def overlap_check(overlap_n: int, *, eps: float, fixed_ticks_scale: float,
     }
 
 
+def default_cache_dir() -> str:
+    """Benchmark-local plan cache (gitignored)."""
+    return os.path.join(
+        os.path.dirname(os.path.abspath(__file__)), "artifacts", "plan_cache"
+    )
+
+
 def run(n: int = 100_000, overlap_n: int = 2000, trials: int = 1,
         eps: float = 1e-3, fixed_ticks_scale: float = 0.2,
-        backend: str = "lax", seed: int = 0,
+        backend: str = "lax", seed: int = 0, workers: int = 0,
+        cache_dir: str | None = None,
         artifact: str | None = None) -> list[str]:
     artifact = artifact or f"large_n_{n}"
+    cache_dir = cache_dir or default_cache_dir()
     overlap = overlap_check(
         overlap_n, eps=eps, fixed_ticks_scale=fixed_ticks_scale,
         backend=backend, seed=seed,
     ) if overlap_n else None
 
-    g, graph_s = timed(random_geometric_graph, n, seed=1000 + n)
+    # cold setup: streamed graph gen + plan build, forced fresh (the
+    # store also primes the cache for the warm measurement)
+    plan, cold_info = setup_plan(
+        n=n, graph_seed=1000 + n, seed=seed, workers=workers,
+        cache_dir=cache_dir, refresh=True,
+    )
+    graph_s = float(cold_info["graph_gen_s"])
+    plan_s = float(cold_info["plan_build_s"].get("total", 0.0))
+    cold_setup_s = graph_s + plan_s
+    # warm setup: content-addressed cache hit, graph gen + build skipped
+    warm_plan, warm_info = setup_plan(
+        n=n, graph_seed=1000 + n, seed=seed, workers=workers,
+        cache_dir=cache_dir,
+    )
+    warm_setup_s = float(warm_info["setup_s"])
+    assert warm_info["cache"] == "hit", warm_info
+    del warm_plan
     x0 = np.random.default_rng(n).normal(0, 1, n)
-    plan, _ = timed(build_plan, g, seed=seed)
     seeds = tuple(seed + t for t in range(trials))
     res, cold_s = _execute_stats(
         plan, x0, eps=eps, fixed_ticks_scale=fixed_ticks_scale,
@@ -113,10 +143,21 @@ def run(n: int = 100_000, overlap_n: int = 2000, trials: int = 1,
         "fixed_ticks_scale": fixed_ticks_scale,
         "graph_seed": 1000 + int(n),
         "levels": len(plan.levels),
+        "workers": int(workers),
+        "graph_gen_s": graph_s,
         "plan_build_s": dict(plan.build_seconds or {}),
+        "setup": {
+            "cold_s": float(cold_setup_s),
+            "warm_s": float(warm_setup_s),
+            "warm_over_cold": float(warm_setup_s / max(cold_setup_s, 1e-9)),
+            "cache_key": warm_info["key"],
+            "load_s": float(warm_info.get("load_s", 0.0)),
+        },
         "wall_clock_s": {
             "graph": float(graph_s),
-            "plan": float((plan.build_seconds or {}).get("total", 0.0)),
+            "plan": plan_s,
+            "setup_cold": float(cold_setup_s),
+            "setup_warm": float(warm_setup_s),
             "execute_cold": float(cold_s),
             "execute_warm": float(warm_s),
         },
@@ -137,9 +178,16 @@ def run(n: int = 100_000, overlap_n: int = 2000, trials: int = 1,
     out.append(csv_line(
         f"large_n/n{n}", cold_s * 1e6,
         f"msgs={payload['messages'][0]} err={payload['err'][0]:.2e} "
+        f"graph={graph_s:.2f}s "
         f"plan={payload['plan_build_s'].get('total', 0.0):.2f}s "
         f"warm={warm_s:.2f}s "
         f"rss={mem['host_peak_rss_bytes'] / 2**30:.2f}GiB",
+    ))
+    out.append(csv_line(
+        f"large_n/setup_n{n}", cold_setup_s * 1e6,
+        f"cold={cold_setup_s:.2f}s warm={warm_setup_s:.3f}s "
+        f"({payload['setup']['warm_over_cold']:.1%} of cold, cache hit) "
+        f"workers={workers}",
     ))
     if overlap is not None:
         out.append(csv_line(
@@ -162,6 +210,12 @@ if __name__ == "__main__":
     ap.add_argument("--scale", type=float, default=0.2,
                     help="fixed_ticks_scale (FI tick budget)")
     ap.add_argument("--backend", default="lax")
+    ap.add_argument("--workers", type=int, default=0,
+                    help="fork-pool width for plan construction "
+                         "(bitwise-identical to serial; wall-clock only)")
+    ap.add_argument("--cache-dir", default=None,
+                    help="plan-cache directory "
+                         "(default benchmarks/artifacts/plan_cache)")
     ap.add_argument("--artifact", default=None)
     ap.add_argument("--smoke", action="store_true",
                     help="CI profile: n=20000 -> artifact large_n_smoke")
@@ -171,6 +225,7 @@ if __name__ == "__main__":
     for line in run(
         n=args.n, overlap_n=args.overlap_n, trials=args.trials,
         eps=args.eps, fixed_ticks_scale=args.scale, backend=args.backend,
+        workers=args.workers, cache_dir=args.cache_dir,
         artifact=args.artifact,
     ):
         print(line)

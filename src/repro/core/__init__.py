@@ -30,7 +30,20 @@ from .multiscale import (
 )
 from .partition import Partition, auto_levels, build_partition
 from .plan import HierarchyPlan, LevelPlan, build_plan
-from .rgg import Graph, connectivity_radius, grid_graph, random_geometric_graph
+from .plan_cache import (
+    PLAN_CACHE_VERSION,
+    load_plan,
+    plan_key,
+    setup_plan,
+    store_plan,
+)
+from .rgg import (
+    RGG_METHODS,
+    Graph,
+    connectivity_radius,
+    grid_graph,
+    random_geometric_graph,
+)
 from .schedule import (
     CsrGraphs,
     ExchangeSchedule,
@@ -83,12 +96,18 @@ __all__ = [
     "greedy_route",
     "grid_graph",
     "handshake_cost",
+    "load_plan",
     "multiscale_gossip",
     "path_averaging",
+    "plan_key",
+    "PLAN_CACHE_VERSION",
     "random_geometric_graph",
     "relative_error",
+    "RGG_METHODS",
     "route_table",
     "route_to_node",
+    "setup_plan",
+    "store_plan",
     "standard_gossip",
     "SyncMultiscaleResult",
     "synchronous_multiscale",

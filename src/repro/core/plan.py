@@ -202,6 +202,19 @@ class HierarchyPlan:
     def k(self) -> int:
         return self.partition.k
 
+    # plans are pickled by the content-addressed plan cache
+    # (core.plan_cache); the compiled-executor cache holds jitted
+    # callables and must not ride along
+    def __getstate__(self):
+        state = dict(self.__dict__)
+        state["exec_cache"] = {}
+        return state
+
+    def __setstate__(self, state):
+        self.__dict__.update(state)
+        if not self.__dict__.get("exec_cache"):
+            self.exec_cache = {}
+
 
 # --------------------------------------------------------------------------
 # shared helpers (both builders)
@@ -659,15 +672,28 @@ def _group_by(keys: np.ndarray) -> tuple:
 
 
 def _components_per_group(
-    num: int, src: np.ndarray, dst: np.ndarray, group_of: np.ndarray,
-    n_groups: int,
+    num: int, src: Optional[np.ndarray], dst: Optional[np.ndarray],
+    group_of: np.ndarray, n_groups: int,
+    csr: Optional[tuple[np.ndarray, np.ndarray]] = None,
 ) -> np.ndarray:
     """#connected components per group for a graph on `num` vertices
-    whose edges never cross groups."""
+    whose edges never cross groups.  Pass ``csr=(indptr, indices)`` when
+    the adjacency is already in CSR layout — skips the COO build/sort,
+    which dominates at nnz ~ 10^8."""
     import scipy.sparse as sp
     from scipy.sparse.csgraph import connected_components
 
-    if len(src):
+    if csr is not None:
+        indptr, indices = csr
+        if len(indices):
+            adj = sp.csr_matrix(
+                (np.ones(len(indices), np.int8), indices, indptr),
+                shape=(num, num),
+            )
+            _, labels = connected_components(adj, directed=False)
+        else:
+            labels = np.arange(num)
+    elif len(src):
         adj = sp.coo_matrix(
             (np.ones(len(src), np.int8), (src, dst)), shape=(num, num)
         )
@@ -679,9 +705,42 @@ def _components_per_group(
     return np.bincount(uniq // (num + 1), minlength=n_groups)
 
 
+# nodes per sub-band of the in-cell edge scan: ~64k rows keeps every
+# slice (flat ids, repeated cells, keep mask) a few MB — cache-resident
+# on the same host the graph builder's chunk size was tuned for
+_CELLS_BAND = 65_536
+
+
+def _cells_edge_chunk(payload, lohi):
+    """fork_map task: filter one contiguous NATURAL node range [lo, hi)
+    of the CSR adjacency down to in-cell edges.  `nbr_flat` is scanned
+    sequentially and the only gather is into the n-int32 cell-id table
+    (cache-resident), so the pass is memory-bandwidth bound on one read
+    of the flat slice — rank-ordering the survivors is the caller's
+    O(kept) permute, not an O(nnz) reorder here.  Returns (kept-count
+    per row, kept partner ids); chunks concatenated in task order
+    reproduce the full natural-order edge stream bitwise."""
+    nbr_start, nbr_flat, degrees, cell32 = payload
+    lo, hi = lohi
+    kept_counts, kept_dst = [], []
+    for b0 in range(lo, hi, _CELLS_BAND):
+        b1 = min(b0 + _CELLS_BAND, hi)
+        s0 = int(nbr_start[b0])
+        flat = nbr_flat[s0:int(nbr_start[b1])]
+        keep = cell32[flat] == np.repeat(cell32[b0:b1], degrees[b0:b1])
+        ck = np.zeros(len(flat) + 1, np.int64)
+        np.cumsum(keep, out=ck[1:])
+        bound = nbr_start[b0:b1 + 1] - s0
+        kept_counts.append(ck[bound[1:]] - ck[bound[:-1]])
+        kept_dst.append(flat[keep])
+    if not kept_counts:
+        return np.zeros(0, np.int64), np.zeros(0, np.int32)
+    return np.concatenate(kept_counts), np.concatenate(kept_dst)
+
+
 def _build_vectorized(
     g: Graph, part: Partition, rng: np.random.Generator,
-    seed: int, rep_mode: str, timings: dict,
+    seed: int, rep_mode: str, timings: dict, workers: int = 0,
 ) -> HierarchyPlan:
     n = g.n
     K = part.k
@@ -701,19 +760,46 @@ def _build_vectorized(
     slot_node[graph_of, local_of] = np.arange(n, dtype=np.int32)
 
     # all in-cell directed edges, flattened in (node, row-slot) order —
-    # exactly the induced_subgraph row order of the reference builder
-    src = np.repeat(np.arange(n, dtype=np.int64), g.degrees)
-    dst = g.neighbors[g.neighbors >= 0].astype(np.int64)
-    keep = cell_of_node[src] == cell_of_node[dst]
-    src, dst = src[keep], dst[keep]
-    # entries sorted by owner rank (graph, local); stable keeps row order
+    # exactly the induced_subgraph row order of the reference builder.
+    # The filter scans the CSR in natural node order (the sequential,
+    # cache-friendly direction; sharded over node ranges when
+    # workers > 1), then permutes only the O(kept) survivors into rank
+    # (cell-sorted) row order — never the O(nnz) stream.  The result is
+    # the same edge sequence as the historical filter-then-stable-sort.
+    order = np.argsort(cell_of_node, kind="stable")
     rank = np.empty(n, np.int64)
-    rank[np.argsort(cell_of_node, kind="stable")] = np.arange(n)
-    eperm = np.argsort(rank[src], kind="stable")
-    src, dst = src[eperm], dst[eperm]
-    in_deg = np.bincount(src, minlength=n).astype(np.int64)
+    rank[order] = np.arange(n)
+    cell32 = cell_of_node.astype(np.int32)
+    payload = (g.nbr_start, g.nbr_flat, g.degrees, cell32)
+    if workers > 1 and n >= 2 * workers:
+        from .parallel import fork_map
+
+        bounds = np.linspace(0, n, workers + 1).astype(np.int64)
+        tasks = [(int(bounds[i]), int(bounds[i + 1]))
+                 for i in range(workers)]
+        chunks = fork_map(
+            _cells_edge_chunk, tasks, workers=workers, payload=payload
+        )
+    else:
+        chunks = [_cells_edge_chunk(payload, (0, n))]
+    kept_nat = np.concatenate([c[0] for c in chunks])  # natural row order
+    dst_nat = np.concatenate([c[1] for c in chunks])
+    # natural -> rank row order: within-row order is CSR order on both
+    # sides, so each row just shifts by (rank-space start - natural one)
+    kept_ord = kept_nat[order]
+    out_start = np.zeros(n, np.int64)
+    np.cumsum(kept_ord[:-1], out=out_start[1:])
+    nat_start = np.zeros(n, np.int64)
+    np.cumsum(kept_nat[:-1], out=nat_start[1:])
+    pos = (
+        np.repeat(out_start[rank] - nat_start, kept_nat)
+        + np.arange(len(dst_nat), dtype=np.int64)
+    )
+    dst = np.empty_like(dst_nat)
+    dst[pos] = dst_nat
+    src = np.repeat(order.astype(np.int32), kept_ord)
     degrees = np.zeros((B, C), np.int32)
-    degrees[graph_of, local_of] = in_deg.astype(np.int32)
+    degrees[graph_of, local_of] = kept_nat.astype(np.int32)
     nbr_start, nnz = _exclusive_starts(degrees)
     nbr_flat = np.concatenate(
         [local_of[dst], [0]]
@@ -721,10 +807,16 @@ def _build_vectorized(
     hop_flat = np.ones(nnz + 1, np.int32)
     row_node = np.concatenate([src, [n]]).astype(np.int32)
     partner_flat = np.concatenate([dst, [n]]).astype(np.int32)
-    max_deg = max(1, int(in_deg.max(initial=0)))
+    max_deg = max(1, int(kept_nat.max(initial=0)))
 
-    # disconnected-cell count via sparse connected components
-    comp_per_cell = _components_per_group(n, src, dst, graph_of, B)
+    # disconnected-cell count via sparse connected components, fed the
+    # rank-space CSR we already hold (COO build/sort skipped)
+    comp_indptr = np.zeros(n + 1, np.int64)
+    np.cumsum(kept_ord, out=comp_indptr[1:])
+    comp_per_cell = _components_per_group(
+        n, None, None, graph_of[order], B,
+        csr=(comp_indptr, rank[dst]),
+    )
     disconnected = int((comp_per_cell > 1).sum())
 
     # elect finest-cell representatives + Alg.1 line-16 reweighting factor
@@ -863,7 +955,7 @@ def _build_vectorized(
         flat_pairs = np.stack(
             [rep_node[cell_u], rep_node[cell_v]], axis=1
         ) if E else np.zeros((0, 2), np.int64)
-        routes = batched_routes_to_nodes(g, flat_pairs)
+        routes = batched_routes_to_nodes(g, flat_pairs, workers=workers)
         timings["routes"] += time.perf_counter() - t0
 
         t0 = time.perf_counter()
@@ -980,6 +1072,7 @@ def build_plan(
     seed: int = 0,
     rep_mode: str = "random",
     method: str = "vectorized",
+    workers: int = 0,
 ) -> HierarchyPlan:
     """One ahead-of-time pass over the deployment: partition, batched
     induced subgraphs, overlay grids, representative election, batched
@@ -989,6 +1082,12 @@ def build_plan(
     bitwise-identical plans; the reference path keeps the historical
     python loops as the oracle (it is quadratic in n — use it only at
     fig3 scales).
+
+    ``workers > 1`` shards the cell-filter and routing stages of the
+    vectorized builder across a fork pool (`core.parallel`); the output
+    is bitwise-identical to the serial build (tested), so the knob is
+    purely a wall-clock lever on multi-core hosts.  It never changes
+    the plan, and is excluded from the plan-cache key.
     """
     if method not in PLAN_METHODS:
         raise ValueError(f"unknown plan method {method!r}")
@@ -999,8 +1098,13 @@ def build_plan(
     t0 = time.perf_counter()
     part = build_partition(g.n, k=k, a=a, cell_max=cell_max)
     timings["partition"] += time.perf_counter() - t0
-    builder = _build_vectorized if method == "vectorized" else _build_reference
-    plan = builder(g, part, rng, seed, rep_mode, timings)
+    if method == "vectorized":
+        plan = _build_vectorized(
+            g, part, rng, seed, rep_mode, timings, workers=workers
+        )
+    else:
+        plan = _build_reference(g, part, rng, seed, rep_mode, timings)
     timings["total"] = time.perf_counter() - t_all
+    timings["workers"] = workers
     plan.build_seconds = {kk: round(v, 6) for kk, v in timings.items()}
     return plan

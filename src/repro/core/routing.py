@@ -74,7 +74,8 @@ def greedy_route(
         deg = g.degrees[cur]
         if deg == 0:
             break
-        nbrs = g.neighbors[cur, :deg]
+        s = g.nbr_start[cur]
+        nbrs = g.nbr_flat[s:s + deg]
         d = np.sum((coords[nbrs] - target_xy) ** 2, axis=1)
         best = int(np.argmin(d))
         if d[best] >= d_cur:
@@ -105,7 +106,7 @@ def _bfs_path(g: Graph, src: int, dst: int) -> Optional[np.ndarray]:
         u = q.popleft()
         if u == dst:
             break
-        for v in g.neighbors[u, : g.degrees[u]]:
+        for v in g.nbr_flat[g.nbr_start[u]:g.nbr_start[u] + g.degrees[u]]:
             v = int(v)
             if prev[v] < 0:
                 prev[v] = u
@@ -174,12 +175,15 @@ def batched_greedy_routes(
     hops = np.zeros(E, np.int64)
     cols = [cur.astype(np.int32)]
     # the frontier compresses to still-moving routes each step, so the
-    # per-step cost tracks the number of live walks, not E
+    # per-step cost tracks the number of live walks, not E; the dense
+    # padded view is materialized once (cached on the Graph) — a plain
+    # row gather per step beats re-packing CSR rows every iteration
+    dense = g.neighbors
     act = np.where(g.degrees[cur] > 0)[0]
     for _ in range(max_hops):
         if len(act) == 0:
             break
-        nbrs = g.neighbors[cur[act]]                 # (A, D)
+        nbrs = dense[cur[act]]                       # (A, D)
         valid = nbrs >= 0
         nb = np.where(valid, nbrs, 0)
         d = (cx[nb] - tx[act, None]) ** 2 + (cy[nb] - ty[act, None]) ** 2
@@ -219,12 +223,13 @@ def _batched_bfs(g: Graph, srcs: np.ndarray, dsts: np.ndarray) -> list:
     next_rank = np.ones(F, np.int64)
     frontier_f, frontier_v = np.arange(F), srcs.copy()
     found = prev[np.arange(F), dsts] >= 0
+    dense = g.neighbors  # cached; rows compact, so slots == CSR offsets
     while len(frontier_f):
         keep = ~found[frontier_f]
         ff, fv = frontier_f[keep], frontier_v[keep]
         if len(ff) == 0:
             break
-        nbrs = g.neighbors[fv]                       # (M, D)
+        nbrs = dense[fv]                             # (M, D)
         mi, slot = np.nonzero(nbrs >= 0)
         cf, cu, cv = ff[mi], fv[mi], nbrs[mi, slot].astype(np.int64)
         undisc = prev[cf, cv] < 0
@@ -262,12 +267,72 @@ def _batched_bfs(g: Graph, srcs: np.ndarray, dsts: np.ndarray) -> list:
     return paths
 
 
-def batched_routes_to_nodes(g: Graph, pairs: np.ndarray) -> BatchedRoutes:
+# serial batching width for the greedy walker: 16k pairs x ~200 slots
+# x 8B keeps each step's padded temporaries ~25MB (cache/allocator
+# friendly on the same host DEFAULT_CHUNK was tuned for)
+_ROUTE_CHUNK = 16_384
+
+
+def _routes_chunk(payload, lohi) -> BatchedRoutes:
+    """fork_map task: route one contiguous slice of the pair list (the
+    payload graph/pairs arrive copy-on-write via the forked pool)."""
+    g, pairs = payload
+    lo, hi = lohi
+    return batched_routes_to_nodes(g, pairs[lo:hi])
+
+
+def _merge_batched_routes(parts: list[BatchedRoutes]) -> BatchedRoutes:
+    """Concatenate per-chunk results in chunk order.  Routes for distinct
+    pairs are independent, and every path array is (-1)-padded to
+    max(hops)+1, so re-padding chunk results to the global width
+    reproduces the serial output bitwise."""
+    width = max(p.nodes.shape[1] for p in parts)
+    nodes = np.full((sum(len(p) for p in parts), width), -1, np.int32)
+    row = 0
+    for p in parts:
+        nodes[row:row + len(p), : p.nodes.shape[1]] = p.nodes
+        row += len(p)
+    return BatchedRoutes(
+        nodes=nodes,
+        hops=np.concatenate([p.hops for p in parts]),
+        greedy_ok=np.concatenate([p.greedy_ok for p in parts]),
+    )
+
+
+def batched_routes_to_nodes(
+    g: Graph, pairs: np.ndarray, workers: int = 0
+) -> BatchedRoutes:
     """Batched `route_to_node` for an (E, 2) array of (src, dst) pairs:
     vectorized greedy walks for all pairs, then one batched BFS pass over
-    the (rare) pairs whose greedy walk terminated elsewhere."""
+    the (rare) pairs whose greedy walk terminated elsewhere.
+
+    ``workers > 1`` shards the pair list across a fork pool
+    (`core.parallel.fork_map`); the chunk-order merge is bitwise-equal
+    to the serial path.  Serial calls over more than `_ROUTE_CHUNK`
+    pairs are chunked the same way in-process: every greedy step's
+    temporaries are (live_pairs, max_deg) float64, so bounding the
+    batch keeps them allocator- and cache-friendly — same result, one
+    walk per pair either way."""
     pairs = np.asarray(pairs, np.int64).reshape(-1, 2)
     E = len(pairs)
+    if workers > 1 and E >= 2 * workers:
+        from .parallel import fork_map
+
+        bounds = np.linspace(0, E, workers + 1).astype(np.int64)
+        tasks = [
+            (int(bounds[i]), int(bounds[i + 1])) for i in range(workers)
+        ]
+        parts = fork_map(
+            _routes_chunk, tasks, workers=workers, payload=(g, pairs)
+        )
+        return _merge_batched_routes(parts)
+    if E > _ROUTE_CHUNK:
+        g.neighbors  # materialize the shared dense view once, not per chunk
+        parts = [
+            batched_routes_to_nodes(g, pairs[lo:lo + _ROUTE_CHUNK])
+            for lo in range(0, E, _ROUTE_CHUNK)
+        ]
+        return _merge_batched_routes(parts)
     srcs, dsts = pairs[:, 0], pairs[:, 1]
     greedy = batched_greedy_routes(g, srcs, g.coords[dsts])
     final = greedy.nodes[np.arange(E), greedy.hops]

@@ -1,0 +1,167 @@
+"""Content-addressed plan cache (core.plan_cache) + parallel build
+parity: a cache hit is bitwise-equal to a fresh build, stale keys miss,
+and `build_plan(..., workers>1)` reproduces the serial plan exactly."""
+import numpy as np
+import pytest
+
+from repro.core import build_plan, random_geometric_graph
+from repro.core.plan_cache import (
+    PLAN_CACHE_VERSION,
+    graph_digest_spec,
+    graph_spec,
+    load_plan,
+    plan_key,
+    setup_plan,
+    store_plan,
+)
+
+# every array field a LevelPlan carries (mirrors tests/test_plan_methods)
+_LP_ARRAY_FIELDS = (
+    "degrees", "n_nodes", "node_mask", "slot_node",
+    "nbr_start", "nbr_flat", "hop_flat", "row_node", "partner_flat",
+    "edge_b", "edge_i", "edge_si", "edge_j", "edge_sj",
+    "edge_pos_i", "edge_pos_j",
+    "inc_node", "inc_edge", "inc_count",
+    "rep_slot", "rep_node", "line16", "next_graph", "next_slot",
+)
+
+
+def _assert_plans_bitwise_equal(p1, p2):
+    assert len(p1.levels) == len(p2.levels)
+    for lp1, lp2 in zip(p1.levels, p2.levels):
+        assert lp1.level == lp2.level and lp1.kind == lp2.kind
+        assert lp1.max_hops == lp2.max_hops
+        assert lp1.max_deg == lp2.max_deg
+        for f in _LP_ARRAY_FIELDS:
+            a, b = getattr(lp1, f), getattr(lp2, f)
+            if a is None or b is None:
+                assert a is None and b is None, f
+            else:
+                np.testing.assert_array_equal(a, b, err_msg=f)
+        ra, rb = lp1.routes, lp2.routes
+        if ra is None or rb is None:
+            assert ra is None and rb is None
+        else:
+            np.testing.assert_array_equal(ra.nodes, rb.nodes)
+            np.testing.assert_array_equal(ra.hops, rb.hops)
+            np.testing.assert_array_equal(ra.greedy_ok, rb.greedy_ok)
+    np.testing.assert_array_equal(p1.rep_counts, p2.rep_counts)
+    np.testing.assert_array_equal(p1.final_graph, p2.final_graph)
+    np.testing.assert_array_equal(p1.final_slot, p2.final_slot)
+    assert p1.disconnected_cells == p2.disconnected_cells
+    assert p1.disseminate == p2.disseminate
+    np.testing.assert_array_equal(p1.graph.nbr_start, p2.graph.nbr_start)
+    np.testing.assert_array_equal(p1.graph.nbr_flat, p2.graph.nbr_flat)
+    np.testing.assert_array_equal(p1.graph.coords, p2.graph.coords)
+
+
+def test_cache_hit_bitwise_equal_to_fresh_build(tmp_path):
+    d = str(tmp_path)
+    p1, i1 = setup_plan(600, graph_seed=11, seed=5, cache_dir=d)
+    assert i1["cache"] == "miss" and i1["graph_gen_s"] > 0
+    p2, i2 = setup_plan(600, graph_seed=11, seed=5, cache_dir=d)
+    assert i2["cache"] == "hit" and i2["graph_gen_s"] == 0.0
+    _assert_plans_bitwise_equal(p1, p2)
+    # fresh (uncached) build of the same spec for good measure
+    g = random_geometric_graph(600, seed=11)
+    _assert_plans_bitwise_equal(p2, build_plan(g, seed=5))
+
+
+def test_cache_hit_skips_and_refresh_rebuilds(tmp_path):
+    d = str(tmp_path)
+    _, i1 = setup_plan(400, graph_seed=3, seed=0, cache_dir=d)
+    assert i1["cache"] == "miss"
+    _, i2 = setup_plan(400, graph_seed=3, seed=0, cache_dir=d)
+    assert i2["cache"] == "hit" and "plan_build_s" in i2
+    _, i3 = setup_plan(400, graph_seed=3, seed=0, cache_dir=d, refresh=True)
+    assert i3["cache"] == "miss" and i3["graph_gen_s"] > 0
+    _, i4 = setup_plan(400, graph_seed=3, seed=0, cache_dir=d, use_cache=False)
+    assert i4["cache"] == "off"
+
+
+def test_stale_keys_miss(tmp_path):
+    d = str(tmp_path)
+    p1, _ = setup_plan(400, graph_seed=3, seed=0, cache_dir=d)
+    stored = plan_key(graph_spec(400, seed=3), seed=0)
+    assert load_plan(stored, cache_dir=d) is not None
+    # any change to the spec produces a different key -> miss
+    for other in (
+        plan_key(graph_spec(400, seed=4), seed=0),       # graph seed
+        plan_key(graph_spec(401, seed=3), seed=0),       # n
+        plan_key(graph_spec(400, seed=3, c=2.5), seed=0),  # density
+        plan_key(graph_spec(400, seed=3), seed=1),       # plan seed
+        plan_key(graph_spec(400, seed=3), seed=0, k=2),  # partition
+        plan_key(graph_spec(400, seed=3), seed=0, rep_mode="first"),
+    ):
+        assert other != stored
+        assert load_plan(other, cache_dir=d) is None
+
+
+def test_version_bump_invalidates(tmp_path, monkeypatch):
+    d = str(tmp_path)
+    _, i1 = setup_plan(400, graph_seed=3, seed=0, cache_dir=d)
+    monkeypatch.setattr(
+        "repro.core.plan_cache.PLAN_CACHE_VERSION", PLAN_CACHE_VERSION + 1
+    )
+    _, i2 = setup_plan(400, graph_seed=3, seed=0, cache_dir=d)
+    assert i2["cache"] == "miss"
+
+
+def test_digest_spec_for_external_graph(tmp_path):
+    d = str(tmp_path)
+    g = random_geometric_graph(500, seed=7)
+    p1, i1 = setup_plan(g=g, seed=2, cache_dir=d)
+    assert i1["cache"] == "miss"
+    p2, i2 = setup_plan(g=g, seed=2, cache_dir=d)
+    assert i2["cache"] == "hit"
+    _assert_plans_bitwise_equal(p1, p2)
+    # different content -> different key
+    g2 = random_geometric_graph(500, seed=8)
+    assert graph_digest_spec(g) != graph_digest_spec(g2)
+    with pytest.raises(ValueError):
+        setup_plan(500, g=g)
+    with pytest.raises(ValueError):
+        setup_plan()
+
+
+def test_corrupt_entry_misses(tmp_path):
+    d = str(tmp_path)
+    _, i1 = setup_plan(400, graph_seed=3, seed=0, cache_dir=d)
+    path = next(tmp_path.glob("*.plan.pkl"))
+    path.write_bytes(b"not a pickle")
+    p, i2 = setup_plan(400, graph_seed=3, seed=0, cache_dir=d)
+    assert i2["cache"] == "miss"
+    assert load_plan(i2["key"], cache_dir=d) is not None
+
+
+def test_store_load_round_trip_drops_exec_cache(tmp_path):
+    g = random_geometric_graph(400, seed=3)
+    plan = build_plan(g, seed=0)
+    plan.exec_cache["sentinel"] = object()
+    key = plan_key(graph_digest_spec(g), seed=0)
+    store_plan(key, plan, cache_dir=str(tmp_path))
+    loaded = load_plan(key, cache_dir=str(tmp_path))
+    assert loaded.exec_cache == {}
+    _assert_plans_bitwise_equal(plan, loaded)
+
+
+@pytest.mark.parametrize("workers", [2, 3])
+def test_parallel_build_bitwise_equals_serial(workers):
+    g = random_geometric_graph(800, seed=13)
+    serial = build_plan(g, seed=4)
+    parallel = build_plan(g, seed=4, workers=workers)
+    _assert_plans_bitwise_equal(serial, parallel)
+    assert parallel.build_seconds["workers"] == workers
+
+
+def test_parallel_routes_bitwise_equal():
+    from repro.core.routing import batched_routes_to_nodes
+
+    g = random_geometric_graph(500, seed=7)
+    rng = np.random.default_rng(0)
+    pairs = rng.integers(0, g.n, size=(64, 2))
+    serial = batched_routes_to_nodes(g, pairs)
+    chunked = batched_routes_to_nodes(g, pairs, workers=3)
+    np.testing.assert_array_equal(serial.nodes, chunked.nodes)
+    np.testing.assert_array_equal(serial.hops, chunked.hops)
+    np.testing.assert_array_equal(serial.greedy_ok, chunked.greedy_ok)

@@ -58,10 +58,7 @@ def _dead_end_graph() -> Graph:
         [0.30, 0.52],   # 5: bait — closer to 4 than 0, but a dead end
     ])
     pairs = np.array([[0, 1], [1, 2], [2, 3], [3, 4], [0, 5]], np.int32)
-    from repro.core.rgg import _adjacency_from_pairs
-
-    neighbors, degrees = _adjacency_from_pairs(6, pairs)
-    return Graph(coords=coords, neighbors=neighbors, degrees=degrees, radius=0.4)
+    return Graph.from_pairs(coords, pairs, radius=0.4)
 
 
 def test_batched_bfs_fallback_matches_scalar():

@@ -1,0 +1,175 @@
+"""Bitwise parity suite for the streamed bucket graph builder vs the
+cKDTree reference (ISSUE 8): same seed => identical CSR, invariant to
+the streaming chunk size, plus parity tests for the vectorized
+`induced_subgraph` row packing and the csgraph-based component labels
+(each checked against a per-row / BFS reference reimplementation of the
+historical code)."""
+import numpy as np
+import pytest
+
+from repro.core.rgg import (
+    Graph,
+    grid_graph,
+    induced_subgraph,
+    random_geometric_graph,
+    _component_labels,
+)
+
+
+def _assert_same_graph(a: Graph, b: Graph):
+    np.testing.assert_array_equal(a.nbr_start, b.nbr_start)
+    np.testing.assert_array_equal(a.nbr_flat, b.nbr_flat)
+    np.testing.assert_array_equal(a.degrees, b.degrees)
+    np.testing.assert_array_equal(a.coords, b.coords)
+    assert a.radius == b.radius
+
+
+@pytest.mark.parametrize("n", [64, 500, 5000])
+@pytest.mark.parametrize("seed", [0, 7])
+def test_bucket_matches_reference(n, seed):
+    gb = random_geometric_graph(n, seed=seed, method="bucket")
+    gr = random_geometric_graph(n, seed=seed, method="reference")
+    _assert_same_graph(gb, gr)
+
+
+@pytest.mark.parametrize("chunk", [17, 200, 10_000_000])
+def test_bucket_chunk_invariant(chunk):
+    base = random_geometric_graph(500, seed=3, method="bucket")
+    other = random_geometric_graph(500, seed=3, method="bucket", chunk=chunk)
+    _assert_same_graph(base, other)
+
+
+def test_bucket_matches_reference_disconnected():
+    # sub-connectivity radius => many components; the repair path in
+    # plan building consumes exactly these graphs
+    for seed in (0, 5):
+        gb = random_geometric_graph(
+            300, seed=seed, radius=0.03, method="bucket"
+        )
+        gr = random_geometric_graph(
+            300, seed=seed, radius=0.03, method="reference"
+        )
+        _assert_same_graph(gb, gr)
+        assert not gb.is_connected()
+
+
+def test_bucket_matches_reference_grid_coords():
+    # lattice coordinates stress exact on-the-boundary distances
+    # (d == r bitwise) and equal-occupancy buckets
+    gg = grid_graph(12)
+    gb = random_geometric_graph(
+        gg.n, coords=gg.coords, radius=gg.radius, method="bucket"
+    )
+    gr = random_geometric_graph(
+        gg.n, coords=gg.coords, radius=gg.radius, method="reference"
+    )
+    _assert_same_graph(gb, gr)
+    # grid_graph's radius (1.5 / side) also captures the diagonals, so
+    # interior nodes see the full 8-neighborhood here
+    assert int(gb.degrees.max()) == 8
+
+
+def test_unknown_method_raises():
+    with pytest.raises(ValueError):
+        random_geometric_graph(64, method="nope")
+
+
+def test_dense_neighbors_view_matches_csr():
+    g = random_geometric_graph(500, seed=7)
+    nb = g.neighbors
+    assert nb.shape == (g.n, g.max_deg)
+    for u in range(0, g.n, 53):
+        row = nb[u][nb[u] >= 0]
+        np.testing.assert_array_equal(
+            row, g.nbr_flat[g.nbr_start[u]:g.nbr_start[u + 1]]
+        )
+        assert (nb[u][g.degrees[u]:] == -1).all()
+
+
+def test_neighbor_rows_gather():
+    g = random_geometric_graph(500, seed=7)
+    ids = np.array([0, 17, 400, 17])
+    rows = g.neighbor_rows(ids)
+    assert rows.shape[1] == max(1, int(g.degrees[ids].max()))
+    for i, u in enumerate(ids):
+        d = int(g.degrees[u])
+        np.testing.assert_array_equal(
+            rows[i, :d], g.nbr_flat[g.nbr_start[u]:g.nbr_start[u] + d]
+        )
+        assert (rows[i, d:] == -1).all()
+
+
+def test_graph_pickle_drops_cached_dense():
+    import pickle
+
+    g = random_geometric_graph(200, seed=1)
+    _ = g.neighbors, g.max_deg  # materialize the cached views
+    g2 = pickle.loads(pickle.dumps(g))
+    assert "neighbors" not in g2.__dict__ and "max_deg" not in g2.__dict__
+    _assert_same_graph(g, g2)
+    np.testing.assert_array_equal(g.neighbors, g2.neighbors)
+
+
+def test_induced_subgraph_matches_row_loop():
+    # per-row loop reference == the historical compaction loop's layout
+    g = random_geometric_graph(500, seed=7)
+    ids = np.sort(
+        np.random.default_rng(0).choice(g.n, 211, replace=False)
+    ).astype(np.int32)
+    sub, back = induced_subgraph(g, ids)
+    np.testing.assert_array_equal(back, ids)
+    remap = np.full(g.n, -1, np.int32)
+    remap[ids] = np.arange(len(ids), dtype=np.int32)
+    flat_rows = []
+    for u in ids:
+        row = g.nbr_flat[g.nbr_start[u]:g.nbr_start[u + 1]]
+        mapped = remap[row]
+        flat_rows.append(mapped[mapped >= 0])
+    np.testing.assert_array_equal(sub.nbr_flat, np.concatenate(flat_rows))
+    np.testing.assert_array_equal(
+        sub.degrees, np.array([len(r) for r in flat_rows], np.int32)
+    )
+    np.testing.assert_array_equal(sub.coords, g.coords[ids])
+
+
+def test_component_labels_match_bfs():
+    # csgraph labels partition the nodes exactly like the historical
+    # python BFS (label values may differ; the partition may not)
+    g = random_geometric_graph(300, seed=5, radius=0.05)
+    labels = _component_labels(g)
+    seen = np.full(g.n, -1, np.int64)
+    comp = 0
+    for s in range(g.n):
+        if seen[s] >= 0:
+            continue
+        stack = [s]
+        seen[s] = comp
+        while stack:
+            u = stack.pop()
+            for v in g.nbr_flat[g.nbr_start[u]:g.nbr_start[u + 1]]:
+                if seen[v] < 0:
+                    seen[v] = comp
+                    stack.append(int(v))
+        comp += 1
+    assert labels.max() + 1 == comp
+    # same partition: equal labels iff equal BFS labels
+    pairs = set(zip(labels.tolist(), seen.tolist()))
+    assert len(pairs) == comp
+
+
+def test_from_padded_round_trip():
+    g = random_geometric_graph(200, seed=2)
+    g2 = Graph.from_padded(g.coords, g.neighbors, g.degrees, g.radius)
+    _assert_same_graph(g, g2)
+
+
+def test_grid_graph_layout_unchanged():
+    # the grid topology keeps the historical pair-order CSR layout
+    gg = grid_graph(4)
+    assert gg.n == 16 and gg.num_edges == 24
+    np.testing.assert_array_equal(
+        gg.nbr_flat[gg.nbr_start[0]:gg.nbr_start[1]], [1, 4]
+    )
+    np.testing.assert_array_equal(
+        gg.nbr_flat[gg.nbr_start[5]:gg.nbr_start[6]], [6, 9, 4, 1]
+    )

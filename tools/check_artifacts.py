@@ -38,6 +38,9 @@ COMMITTED = "fig2_levels"
 SCRATCH = "fig2_levels_check"
 FIG3_BACKENDS = ("lax", "pallas")
 LARGE_N = "large_n_smoke"
+# minimum absolute graph_gen_s drift (seconds) that counts as real: the
+# smoke builds in ~0.2s, where scheduler noise alone exceeds 15%
+GRAPH_GEN_FLOOR_S = 0.5
 
 
 def check_fig3(tolerance: float) -> list[str]:
@@ -135,6 +138,26 @@ def check_large_n(tolerance: float) -> list[str]:
             f"  {LARGE_N}@n{committed['n']}: messages drifted {rel:.1%} "
             f"(committed {want:.0f} -> fresh {got:.0f}, "
             f"tolerance {tolerance:.0%})")
+    # graph_gen_s gate: the streamed builder's wall clock at the smoke
+    # size, ±tolerance but with an absolute floor — sub-second timings
+    # jitter tens of percent with host load, so only a drift that is
+    # ALSO >= the floor in absolute seconds is a real builder regression
+    want_g = committed.get("graph_gen_s")
+    if want_g is not None:
+        got_g = float(fresh["graph_gen_s"])
+        want_g = float(want_g)
+        rel_g = abs(got_g - want_g) / max(want_g, 1e-9)
+        abs_g = abs(got_g - want_g)
+        bad = rel_g > tolerance and abs_g >= GRAPH_GEN_FLOOR_S
+        status = "DRIFT" if bad else "ok"
+        print(f"  large_n@n{committed['n']}: graph_gen_s "
+              f"committed={want_g:.3f}s fresh={got_g:.3f}s rel={rel_g:+.1%} "
+              f"[{status}]")
+        if bad:
+            failures.append(
+                f"  {LARGE_N}@n{committed['n']}: graph_gen_s drifted "
+                f"{rel_g:.1%} ({want_g:.3f}s -> {got_g:.3f}s, tolerance "
+                f"{tolerance:.0%} with {GRAPH_GEN_FLOOR_S}s floor)")
     return failures
 
 

@@ -7,6 +7,12 @@ executing a `HierarchyPlan` at a given n:
 
   PYTHONPATH=src python tools/membuf_probe.py --gossip-n 100000
 
+`--graph-only` restricts the probe to graph generation (the streamed
+bucket builder's peak RSS, no plan build or execute):
+
+  PYTHONPATH=src python tools/membuf_probe.py --gossip-n 1000000 \
+      --graph-only [--chunk 8000] [--graph-method bucket|reference]
+
 Model mode compiles a (reduced-depth) cell and lists the largest
 per-device HLO buffers — the working tool behind the §Perf memory
 iterations.  It forces a 512-device host platform, so it runs as a
@@ -92,6 +98,38 @@ def gossip_memory_report(
     return report
 
 
+def graph_gen_memory_report(
+    n: int,
+    *,
+    seed: int | None = None,
+    method: str = "bucket",
+    chunk: int | None = None,
+) -> dict:
+    """Peak host RSS of graph generation ALONE at size `n` — the probe
+    behind the streamed bucket builder's O(chunk + nnz) memory claim
+    (the old cKDTree + dense-padded path peaked on the `(n, max_deg)`
+    intermediate instead).  `seed` defaults to the benchmark convention
+    `1000 + n`."""
+    import time
+
+    from repro.core import random_geometric_graph
+
+    kw = {} if chunk is None else {"chunk": chunk}
+    t0 = time.perf_counter()
+    g = random_geometric_graph(
+        n, seed=(1000 + n) if seed is None else seed, method=method, **kw
+    )
+    dt = time.perf_counter() - t0
+    return {
+        "n": int(n),
+        "method": method,
+        "chunk": chunk,
+        "nnz": int(g.nnz),
+        "graph_gen_s": float(dt),
+        "host_peak_rss_bytes": host_peak_rss_bytes(),
+    }
+
+
 # ---------------------------- model probe ------------------------------
 
 
@@ -162,6 +200,13 @@ if __name__ == "__main__":
     ap.add_argument("--gossip-n", type=int, default=None,
                     help="probe the gossip plan+execute path at this n "
                          "instead of compiling a model cell")
+    ap.add_argument("--graph-only", action="store_true",
+                    help="with --gossip-n: probe graph generation alone "
+                         "(the streamed builder's RSS, no plan/execute)")
+    ap.add_argument("--graph-method", default="bucket",
+                    help="graph builder for --graph-only (bucket|reference)")
+    ap.add_argument("--chunk", type=int, default=None,
+                    help="bucket-builder chunk size for --graph-only")
     ap.add_argument("--scale", type=float, default=0.2,
                     help="fixed_ticks_scale for the gossip probe")
     ap.add_argument("--arch", default=None)
@@ -174,13 +219,23 @@ if __name__ == "__main__":
     if a.gossip_n is not None:
         import json
 
-        rep = gossip_memory_report(a.gossip_n, fixed_ticks_scale=a.scale)
-        rss = rep["host_peak_rss_bytes"] / 2**30
-        dev = rep["device_live_bytes"] / 2**20
-        print(f"gossip n={a.gossip_n}: peak_rss={rss:.2f}GiB "
-              f"device_live={dev:.1f}MiB "
-              f"build={rep['plan_build_s'].get('total', 0.0):.2f}s")
-        print(json.dumps(rep, indent=1))
+        if a.graph_only:
+            rep = graph_gen_memory_report(
+                a.gossip_n, method=a.graph_method, chunk=a.chunk
+            )
+            rss = rep["host_peak_rss_bytes"] / 2**30
+            print(f"graph n={a.gossip_n} ({rep['method']}): "
+                  f"peak_rss={rss:.2f}GiB nnz={rep['nnz']} "
+                  f"gen={rep['graph_gen_s']:.2f}s")
+            print(json.dumps(rep, indent=1))
+        else:
+            rep = gossip_memory_report(a.gossip_n, fixed_ticks_scale=a.scale)
+            rss = rep["host_peak_rss_bytes"] / 2**30
+            dev = rep["device_live_bytes"] / 2**20
+            print(f"gossip n={a.gossip_n}: peak_rss={rss:.2f}GiB "
+                  f"device_live={dev:.1f}MiB "
+                  f"build={rep['plan_build_s'].get('total', 0.0):.2f}s")
+            print(json.dumps(rep, indent=1))
     else:
         if a.arch is None:
             ap.error("--arch is required without --gossip-n")
