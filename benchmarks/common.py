@@ -22,6 +22,57 @@ import numpy as np
 ARTIFACTS = os.path.join(os.path.dirname(__file__), "artifacts")
 
 ENGINE_BACKENDS = ("lax", "pallas", "matmul")
+SCHEDULES = ("presampled", "per_tick")
+
+
+def exec_options(backend: str = "lax", schedule: str = "presampled", **kw):
+    """The figure benchmarks' uniform `ExecOptions` constructor: every
+    `run()` takes the same (backend, schedule) pair and threads it to
+    the engine through here instead of the deprecated flat kwargs."""
+    from repro.core import ExecOptions
+
+    return ExecOptions(backend=backend, schedule=schedule, **kw)
+
+
+def _tuple_arg(elem):
+    def parse(s):
+        return tuple(elem(x) for x in s.split(","))
+    return parse
+
+
+def bench_cli(run_fn, argv=None) -> None:
+    """Uniform standalone CLI for `python -m benchmarks.figX`.
+
+    Builds argparse flags from `run_fn`'s keyword defaults, so every
+    figure benchmark exposes the same surface (--trials, --backend,
+    --schedule, --artifact, plus its own numeric knobs) without each
+    module hand-rolling a parser.  Tuple defaults parse as
+    comma-separated lists (e.g. ``--sizes 500,1000``).
+    """
+    import argparse
+    import inspect
+
+    ap = argparse.ArgumentParser(description=run_fn.__module__)
+    for name, p in inspect.signature(run_fn).parameters.items():
+        d = p.default
+        if d is inspect.Parameter.empty or d is None:
+            continue
+        flag = f"--{name.replace('_', '-')}"
+        if name == "backend":
+            ap.add_argument(flag, default=d, choices=ENGINE_BACKENDS)
+        elif name == "schedule":
+            ap.add_argument(flag, default=d, choices=SCHEDULES)
+        elif isinstance(d, bool):
+            ap.add_argument(flag, action=argparse.BooleanOptionalAction,
+                            default=d)
+        elif isinstance(d, tuple):
+            ap.add_argument(flag, type=_tuple_arg(type(d[0])), default=d,
+                            metavar=",".join(str(x) for x in d[:2]) + ",…")
+        elif isinstance(d, (int, float, str)):
+            ap.add_argument(flag, type=type(d), default=d)
+    args = vars(ap.parse_args(argv))
+    for line in run_fn(**{k: v for k, v in args.items() if v is not None}):
+        print(line)
 
 
 def timed(fn, *args, **kwargs):

@@ -21,10 +21,10 @@ from repro.core import (
     build_plan, multiscale_gossip, path_averaging, random_geometric_graph,
 )
 
-from .common import ENGINE_BACKENDS, csv_line, save_artifact, timed
+from .common import csv_line, exec_options, save_artifact, timed
 
 
-def _warm_jit(backend: str) -> float:
+def _warm_jit(opts) -> float:
     """Absorb one-time XLA/LLVM process-init cost before the timed rows.
 
     Compiles a throwaway executor on a tiny unrelated graph: none of the
@@ -39,23 +39,23 @@ def _warm_jit(backend: str) -> float:
         # (allocator, lowering-rule caches)
         for n in (24, 40):
             g = random_geometric_graph(n, seed=9)
-            multiscale_gossip(g, np.zeros(n), eps=1e-2, seed=0,
-                              backend=backend)
+            multiscale_gossip(g, np.zeros(n), eps=1e-2, seed=0, options=opts)
 
     _, dt = timed(warm)
     return dt
 
 
 def run(sizes=(500, 1000, 2000, 4000, 8000), trials: int = 3,
-        eps: float = 1e-4, backend: str = "lax",
+        eps: float = 1e-4, backend: str = "lax", schedule: str = "presampled",
         artifact: str = "fig3_vs_path_averaging") -> list[str]:
+    opts = exec_options(backend, schedule)
     algo_names = ["multiscale", "multiscale_fi", "multiscale_2level",
                   "path_averaging"]
     table: dict = {a: {} for a in algo_names}
     timing: dict = {a: 0.0 for a in algo_names}
     plan_build_s: dict = {}
     graph_gen_s: dict = {}
-    warmup_s = _warm_jit(backend)
+    warmup_s = _warm_jit(opts)
 
     def record(name, n, res, x0, dt):
         timing[name] += dt
@@ -85,7 +85,7 @@ def run(sizes=(500, 1000, 2000, 4000, 8000), trials: int = 3,
         def run_ms(name):
             r, dt = timed(
                 multiscale_gossip, g, x0 if trials > 1 else x0[0], eps=eps,
-                seed=0, weighted=True, trials=trials, backend=backend,
+                seed=0, weighted=True, trials=trials, options=opts,
                 **ms_variants[name],
             )
             return name, r, dt
@@ -134,6 +134,7 @@ def run(sizes=(500, 1000, 2000, 4000, 8000), trials: int = 3,
             "eps": eps,
             "trials": trials,
             "backend": backend,
+            "schedule": schedule,
             # trials share one deployment per n (graph seed 1000+n, the
             # vmapped plan/execute design): messages variance is gossip
             # noise only, NOT across-graph variance as in the paper's
@@ -170,20 +171,6 @@ def run(sizes=(500, 1000, 2000, 4000, 8000), trials: int = 3,
 
 
 if __name__ == "__main__":
-    import argparse
+    from .common import bench_cli
 
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--sizes", default="500,1000,2000,4000,8000")
-    ap.add_argument("--trials", type=int, default=3)
-    ap.add_argument("--eps", type=float, default=1e-4)
-    ap.add_argument("--backend", default="lax", choices=ENGINE_BACKENDS)
-    ap.add_argument("--artifact", default="fig3_vs_path_averaging",
-                    help="artifact basename (smoke runs use a scratch "
-                         "name so the full-run artifact is not clobbered)")
-    args = ap.parse_args()
-    for line in run(
-        sizes=tuple(int(s) for s in args.sizes.split(",")),
-        trials=args.trials, eps=args.eps, backend=args.backend,
-        artifact=args.artifact,
-    ):
-        print(line)
+    bench_cli(run)

@@ -13,16 +13,17 @@ import numpy as np
 
 from repro.core import multiscale_gossip, path_averaging, random_geometric_graph
 
-from .common import csv_line, save_artifact, timed
+from .common import csv_line, exec_options, save_artifact, timed
 
 
 def run(n: int = 2000, eps: float = 1e-4, seed: int = 0, trials: int = 3,
-        backend: str = "lax") -> list[str]:
+        backend: str = "lax", schedule: str = "presampled",
+        artifact: str = "fig4_cdf") -> list[str]:
     g = random_geometric_graph(n, seed=42)
     x0 = np.random.default_rng(7).normal(0, 1, n)
     ms, t_ms = timed(
         multiscale_gossip, g, x0, eps=eps, seed=seed, weighted=True,
-        trials=trials, backend=backend,
+        trials=trials, options=exec_options(backend, schedule),
     )
     pa_runs, t_pa = timed(lambda: [
         path_averaging(g, x0, eps=eps, seed=seed + t) for t in range(trials)
@@ -49,6 +50,7 @@ def run(n: int = 2000, eps: float = 1e-4, seed: int = 0, trials: int = 3,
         "n": n,
         "trials": trials,
         "backend": backend,
+        "schedule": schedule,
         "trial_mode": "vmapped",
         "wall_clock_s": {"multiscale": t_ms, "path_averaging": t_pa},
         "ms_max_trial_mean": ms_max,
@@ -64,7 +66,7 @@ def run(n: int = 2000, eps: float = 1e-4, seed: int = 0, trials: int = 3,
         "ms_cdf_sends_pooled": ms_sends[::stride].tolist(),
         "pa_cdf_sends_pooled": pa_sends[::stride].tolist(),
     }
-    save_artifact("fig4_cdf", payload)
+    save_artifact(artifact, payload)
     us = (t_ms + t_pa) * 1e6
     return [
         csv_line(
@@ -77,5 +79,6 @@ def run(n: int = 2000, eps: float = 1e-4, seed: int = 0, trials: int = 3,
 
 
 if __name__ == "__main__":
-    for line in run():
-        print(line)
+    from .common import bench_cli
+
+    bench_cli(run)

@@ -57,9 +57,12 @@ OVERLAP_TOLERANCE = 0.15
 
 
 def _execute_stats(plan, x0, *, eps, fixed_ticks_scale, seeds, backend):
+    from repro.core import ExecOptions
+
     res, dt = timed(
         execute_plan, plan, x0, eps=eps, seeds=seeds, weighted=True,
-        fixed_ticks_scale=fixed_ticks_scale, backend=backend,
+        fixed_ticks_scale=fixed_ticks_scale,
+        options=ExecOptions(backend=backend),
     )
     return res, dt
 

@@ -4,6 +4,12 @@ Prints ``name,us_per_call,derived`` CSV.  Profiles:
   default: reduced trial counts sized for a single-core CPU container;
   --full:  the paper's trial counts / sizes (longer).
 
+Every figure benchmark exposes the same `run()` surface — `trials`,
+`backend`, `schedule`, `artifact` plus its own size knobs — so the
+harness dispatches them from one profile table instead of
+special-casing each module; `--backend` / `--schedule` apply to all of
+them at once.
+
 The dry-run roofline cells are produced separately
 (`python -m repro.launch.dryrun --all`, hours of XLA compile time) and
 aggregated here if present.
@@ -22,6 +28,10 @@ def main() -> None:
                     help="paper-scale trials (slow)")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset, e.g. fig3,roofline")
+    ap.add_argument("--backend", default="lax",
+                    help="engine backend for every figure benchmark")
+    ap.add_argument("--schedule", default="presampled",
+                    help="engine schedule mode for every figure benchmark")
     args = ap.parse_args()
 
     from . import (
@@ -30,19 +40,30 @@ def main() -> None:
         table1_node_utilization,
     )
 
-    suites = {
-        "fig2": lambda: fig2_levels.run(
-            n=5000 if args.full else 2000, trials=10 if args.full else 3
-        ),
-        "fig3": lambda: fig3_vs_path_averaging.run(
-            sizes=(500, 1000, 2000, 4000, 8000),
-            trials=10 if args.full else 3,
-        ),
-        "fig4": lambda: fig4_cdf.run(n=2000),
-        "fig5": lambda: fig5_failures.run(n=2000),
-        "table1": lambda: table1_node_utilization.run(
-            n=5000 if args.full else 2000
-        ),
+    # figure suites share one run() signature; each entry is
+    # (module, default-profile kwargs, --full overrides)
+    figures = {
+        "fig2": (fig2_levels, dict(n=2000, trials=3),
+                 dict(n=5000, trials=10)),
+        "fig3": (fig3_vs_path_averaging,
+                 dict(sizes=(500, 1000, 2000, 4000, 8000), trials=3),
+                 dict(trials=10)),
+        "fig4": (fig4_cdf, dict(n=2000), {}),
+        "fig5": (fig5_failures, dict(n=2000, scenario_trials=3),
+                 dict(scenario_trials=10)),
+        "table1": (table1_node_utilization, dict(n=2000), dict(n=5000)),
+    }
+
+    def fig_suite(mod, base, full):
+        kwargs = dict(base)
+        if args.full:
+            kwargs.update(full)
+        return lambda: mod.run(
+            backend=args.backend, schedule=args.schedule, **kwargs
+        )
+
+    suites = {name: fig_suite(*spec) for name, spec in figures.items()}
+    suites.update({
         "kernels": kernel_bench.run,
         "sync": lambda: _subprocess_lines("benchmarks.sync_collectives"),
         "roofline": roofline.run,
@@ -51,7 +72,7 @@ def main() -> None:
             n=1_000_000 if args.full else 100_000
         ),
         "serve": serve_bench.run,
-    }
+    })
     if args.only:
         keep = set(args.only.split(","))
         suites = {k: v for k, v in suites.items() if k in keep}

@@ -21,6 +21,13 @@ from .gossip import (
     gossip_core,
     gossip_until,
 )
+from .medium import (
+    CostModel,
+    FailureModel,
+    MediumCost,
+    expected_retransmissions,
+    price_messages,
+)
 from .metrics import relative_error, theorem2_bound
 from .multiscale import (
     LevelReport,
@@ -28,6 +35,7 @@ from .multiscale import (
     MultiscaleTrials,
     multiscale_gossip,
 )
+from .options import ExecOptions
 from .partition import Partition, auto_levels, build_partition
 from .plan import HierarchyPlan, LevelPlan, build_plan
 from .plan_cache import (
@@ -63,22 +71,34 @@ from .routing import (
     route_table,
     route_to_node,
 )
+from .scenarios import (
+    Scenario,
+    ScenarioResult,
+    run_scenario_matrix,
+    scenario_matrix,
+)
 from .synchronous import SyncMultiscaleResult, synchronous_multiscale
 
 __all__ = [
     "BaselineResult",
     "BatchedRoutes",
+    "CostModel",
     "CsrGraphs",
     "EngineResult",
+    "ExecOptions",
+    "FailureModel",
     "Graph",
     "GossipResult",
     "HierarchyPlan",
     "LevelPlan",
     "LevelReport",
+    "MediumCost",
     "MultiscaleResult",
     "MultiscaleTrials",
     "Partition",
     "Route",
+    "Scenario",
+    "ScenarioResult",
     "accumulate_route_sends",
     "auto_levels",
     "batched_graphs",
@@ -89,6 +109,7 @@ __all__ = [
     "connectivity_radius",
     "dense_to_csr",
     "execute_plan",
+    "expected_retransmissions",
     "flat_usage_to_dense",
     "geographic_gossip",
     "gossip_core",
@@ -101,11 +122,14 @@ __all__ = [
     "path_averaging",
     "plan_key",
     "PLAN_CACHE_VERSION",
+    "price_messages",
     "random_geometric_graph",
     "relative_error",
     "RGG_METHODS",
     "route_table",
     "route_to_node",
+    "run_scenario_matrix",
+    "scenario_matrix",
     "setup_plan",
     "store_plan",
     "standard_gossip",

@@ -46,6 +46,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from .gossip import GOSSIP_BACKENDS, gossip_core
+from .medium import (
+    CostModel,
+    FailureCtx,
+    FailureModel,
+    MediumCost,
+    expected_retransmissions,
+    failure_sets,
+)
+from .options import UNSET, ExecOptions, resolve_exec_args
 from .plan import HierarchyPlan
 from .schedule import CsrGraphs
 
@@ -100,6 +109,7 @@ class EngineResult:
     #                              only; LevelPlan.dense_usage restores the
     #                              historical (B, C, D) view)
     backend: str
+    cost: Optional[MediumCost] = None  # priced medium cost (CostModel runs)
 
     @property
     def trials(self) -> int:
@@ -138,6 +148,114 @@ def _level_consts(lp):
     return c
 
 
+def _failure_consts(plan, failures, maxt_levels, n):
+    """Per-level `FailureCtx`s plus the dissemination freeze-out, from
+    the host-drawn failure node sets mapped through each level's slot
+    layout and static event windows.
+
+    Event times are fractions of the FINEST level's tick budget (the
+    finest level is where events fire); churned nodes stay down through
+    every coarser level (churn_tick=0 there), and a regional outage
+    persists into coarser levels only when its window extends past 1.0.
+
+    Returns (ctxs, freeze): `freeze` is None or a dict with the (n,)
+    mask of nodes that must NOT receive the dissemination down-pass —
+    Byzantine nodes discard it, churned / permanently-out regional
+    nodes never hear it — plus their (graph, slot) coordinates in the
+    finest level, whose post-gossip value is exactly their frozen one.
+    """
+    sets = failure_sets(failures, n, coords=plan.graph.coords)
+    maxt0 = int(maxt_levels[0])
+    t0f, t1f = failures.regional_window
+    reg_perm = t1f > 1.0
+    ctxs = []
+    for li, lp in enumerate(plan.levels):
+        sn = np.asarray(lp.slot_node)
+        valid = sn >= 0
+        idx = np.clip(sn, 0, n - 1)
+        if li == 0:
+            churn_tick = int(round(failures.churn_time * maxt0))
+            reg_t0 = int(round(t0f * maxt0))
+            reg_t1 = maxt0 + 1 if reg_perm else int(round(t1f * maxt0))
+        else:
+            churn_tick = 0  # already-churned nodes stay down
+            maxt = int(maxt_levels[li])
+            reg_t0, reg_t1 = (0, maxt + 1) if reg_perm else (0, 0)
+        ctxs.append(FailureCtx(
+            churned=jnp.asarray(valid & sets["churned"][idx]),
+            straggler=jnp.asarray(valid & sets["straggler"][idx]),
+            byz=jnp.asarray(valid & sets["byz"][idx]),
+            regional=jnp.asarray(valid & sets["regional"][idx]),
+            churn_tick=churn_tick,
+            reg_t0=reg_t0,
+            reg_t1=reg_t1,
+            straggler_success=(
+                float(failures.straggler_success)
+                if failures.straggler_fraction > 0 else 1.0),
+        ))
+    frozen = sets["byz"] | sets["churned"]
+    if reg_perm:
+        frozen = frozen | sets["regional"]
+    freeze = None
+    if plan.disseminate and frozen.any():
+        sn0 = np.asarray(plan.levels[0].slot_node)
+        b, c = np.nonzero(sn0 >= 0)
+        ids = sn0[b, c].astype(np.int64)
+        graph0 = np.zeros(n, np.int32)
+        slot0 = np.zeros(n, np.int32)
+        graph0[ids] = b.astype(np.int32)
+        slot0[ids] = c.astype(np.int32)
+        freeze = {
+            "frozen": jnp.asarray(frozen),
+            "graph0": jnp.asarray(graph0),
+            "slot0": jnp.asarray(slot0),
+        }
+    return ctxs, freeze
+
+
+def _price_levels(cost, plan, n, level_messages, messages, lretx, lcong):
+    """Reduce the executor's per-graph cost counters into a `MediumCost`.
+
+    `level_messages` is (T, L) int64; `lretx`/`lcong` are the L per-level
+    (T, B) device counters (empty tuples when `cost` is None).  When the
+    model is closed-form (``sample=False`` or ``retransmit_p == 1``) the
+    sampled counters are ignored and the Geometric mean ``T*(1-p)/p`` is
+    applied to the logical counts instead.  The dissemination down-pass
+    (n extra logical transmissions, already in `messages`) is priced in
+    expectation — there is no schedule to sample against.
+    """
+    if cost is None:
+        return None
+    p = cost.retransmit_p
+    if cost.sample and p < 1.0:
+        level_retx = np.stack(
+            [np.asarray(r, np.int64)[:, : lp.num_graphs].sum(axis=1)
+             for r, lp in zip(lretx, plan.levels)],
+            axis=1,
+        ).astype(np.float64)
+    else:
+        level_retx = expected_retransmissions(level_messages, p)
+    level_cong = np.stack(
+        [np.asarray(cg, np.float64)[:, : lp.num_graphs].sum(axis=1)
+         for cg, lp in zip(lcong, plan.levels)],
+        axis=1,
+    )
+    retx = level_retx.sum(axis=1)
+    if plan.disseminate and p < 1.0:
+        retx = retx + n * (1.0 - p) / p
+    cong_e = cost.hop_energy * cost.congestion_alpha * level_cong
+    congestion = cong_e.sum(axis=1)
+    return MediumCost(
+        transmissions=np.asarray(messages, np.float64),
+        retransmissions=retx,
+        congestion=congestion,
+        energy=cost.hop_energy * (messages + retx) + congestion,
+        level_energy=(
+            cost.hop_energy * (level_messages + level_retx) + cong_e),
+        model=cost,
+    )
+
+
 def execute_plan(
     plan: HierarchyPlan,
     x0: np.ndarray,
@@ -146,14 +264,18 @@ def execute_plan(
     seeds: Sequence[int] = (0,),
     weighted: bool = False,
     fixed_ticks_scale: float = 0.0,
-    loss_p: Optional[float] = None,
-    max_ticks_per_level: int = 2_000_000,
-    check_every: int = 64,
-    backend: str = "lax",
-    schedule: str = "presampled",
-    mesh=None,
-    interpret: Optional[bool] = None,
-    collect_usage: bool = False,
+    options: Optional[ExecOptions] = None,
+    failures: Optional[FailureModel] = None,
+    cost: Optional[CostModel] = None,
+    # -- deprecated flat kwargs (one-PR shim; see core.options) ----------
+    loss_p=UNSET,
+    max_ticks_per_level=UNSET,
+    check_every=UNSET,
+    backend=UNSET,
+    schedule=UNSET,
+    mesh=UNSET,
+    interpret=UNSET,
+    collect_usage=UNSET,
 ) -> EngineResult:
     """Execute `plan` for T = len(seeds) independent trials in one
     compiled, vmapped call.
@@ -162,22 +284,52 @@ def execute_plan(
     seed drives one trial's exchange randomness; the plan (partition,
     election, routes) is shared, so trials differ only in gossip noise.
 
-    `mesh=` shards the computation via shard_map: a 1-axis
+    `options` (an `ExecOptions`) selects backend / schedule / mesh /
+    check cadence / tick budget; the historical flat kwargs are
+    accepted for one deprecation window and produce bitwise-identical
+    results.  `failures` (a `FailureModel`) carries the paper's
+    `loss_p` message-loss model plus the scenario fields (churn,
+    stragglers, regional outage, Byzantine drops) that perturb the
+    presampled schedule — scenario event times are fractions of the
+    finest level's tick budget, so run scenarios in fixed-iterations
+    mode.  `cost` (a `CostModel`) prices the schedule (energy,
+    retransmissions, congestion) into `EngineResult.cost` WITHOUT
+    perturbing the exchange trajectory: x / usage / messages are
+    bitwise-identical with the cost model on or off.
+
+    `options.mesh` shards the computation via shard_map: a 1-axis
     `jax.sharding.Mesh` shards the vmapped trial axis (T is padded up
     to a multiple of the mesh size with throwaway trials); a 2-axis
     mesh with axes named ``("trials", "nodes")`` also blocks every
     level's graph batch over the "nodes" axis, with psum halos only at
     promotion boundaries — per-trial results are bitwise-independent of
     the sharding either way.  The node-sharded path requires
-    ``schedule="presampled"`` and does not support `collect_usage`
-    (the flat usage buffer is deliberately never assembled globally).
+    ``schedule="presampled"`` and supports neither `collect_usage`
+    (the flat usage buffer is deliberately never assembled globally)
+    nor `failures` scenarios / `cost` pricing (their reductions are
+    batch-global).
 
-    `collect_usage=True` additionally returns the raw per-level flat
+    `options.collect_usage` additionally returns the raw per-level flat
     exchange counters (for attribution audits); leave it off on the hot
     path.
     """
+    options, failures = resolve_exec_args(
+        options, failures,
+        dict(loss_p=loss_p, max_ticks_per_level=max_ticks_per_level,
+             check_every=check_every, backend=backend, schedule=schedule,
+             mesh=mesh, interpret=interpret, collect_usage=collect_usage),
+    )
+    backend, schedule, mesh = options.backend, options.schedule, options.mesh
+    interpret, collect_usage = options.interpret, options.collect_usage
+    check_every = options.check_every
+    max_ticks_per_level = options.max_ticks_per_level
+    loss_p = failures.loss_p if failures is not None else None
+    scenario = failures is not None and failures.has_scenario
     if backend not in GOSSIP_BACKENDS:
         raise ValueError(f"unknown backend {backend!r}")
+    if (scenario or cost is not None) and schedule != "presampled":
+        raise ValueError(
+            "failure scenarios / cost pricing require schedule='presampled'")
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     n = plan.graph.n
@@ -200,6 +352,12 @@ def execute_plan(
                 raise ValueError(
                     "collect_usage is not supported on the (trials, nodes) "
                     "mesh (flat usage stays shard-local)"
+                )
+            if scenario or cost is not None:
+                raise ValueError(
+                    "failure scenarios / cost pricing are not supported on "
+                    "the (trials, nodes) mesh (their reductions are "
+                    "batch-global)"
                 )
         elif len(mesh.shape) != 1:
             raise ValueError(
@@ -236,8 +394,13 @@ def execute_plan(
             maxt_levels.append(int(max_ticks_per_level))
             chk_levels.append(int(check_every))
     # filled only when the executor must be (re)traced: a cache hit never
-    # touches the plan's big constant arrays again
+    # touches the plan's big constant arrays again.  fail_ctxs holds the
+    # per-level scenario flags (slot-mapped failure sets + static event
+    # windows), freeze_c the dissemination freeze-out; both are filled
+    # alongside consts.
     consts: list = []
+    fail_ctxs: list = []
+    freeze_c: list = []
 
     def _shard_cols(B):
         """This shard's contiguous block of the B graphs: clipped column
@@ -250,7 +413,9 @@ def execute_plan(
     def _run(x0_row, key, eps_arr, maxt_arr):
         node_sends = jnp.zeros(n + 1, jnp.int32)  # slot n swallows padding
         lvl_msgs, lvl_ticks, lvl_conv, usages = [], [], [], []
+        lvl_retx, lvl_cong = [], []
         xb = None
+        frozen_vals = None
         for li, (lp, c, chk) in enumerate(zip(plan.levels, consts, chk_levels)):
             B = lp.num_graphs
             if node_mesh:
@@ -271,13 +436,21 @@ def execute_plan(
             else:
                 # promotion left xb global (the psum halo); take our block
                 xb_loc = xb[cols] if node_mesh else xb
-            x, usage, msgs, done, ticks = gossip_core(
+            out = gossip_core(
                 xb_loc, c["adj"], mask,
                 eps_arr[li], jax.random.fold_in(key, li),
                 max_ticks=maxt_arr[li], check_every=chk, loss_p=loss_p,
                 backend=backend, schedule=schedule, interpret=interpret,
                 node_shard=shard,
+                failure_ctx=fail_ctxs[li] if scenario else None,
+                cost_model=cost, hop_cap=max(1, int(lp.max_hops)),
             )
+            if cost is not None:
+                x, usage, msgs, done, ticks, retx_l, cong_l = out
+                lvl_retx.append(retx_l)
+                lvl_cong.append(cong_l)
+            else:
+                x, usage, msgs, done, ticks = out
             # per-graph counters stay int32 on device; they are summed on
             # the host in int64 (jnp.sum would wrap without x64 mode)
             lvl_msgs.append(msgs)
@@ -291,6 +464,14 @@ def execute_plan(
                 lvl_conv.append(done.mean())
             if collect_usage:
                 usages.append(usage)
+            # a frozen node's own post-gossip value at the finest level
+            # is its value for the rest of the run: snapshot it before
+            # promotion for the dissemination freeze-out
+            if li == 0 and scenario and freeze_c and freeze_c[0] is not None:
+                fz = freeze_c[0]
+                e0 = (x[..., 0] if V == 1
+                      else x[..., 0] / jnp.maximum(x[..., 1], 1e-30))
+                frozen_vals = e0[fz["graph0"], fz["slot0"]]
             # attribution: gathers through the plan CSR + one scatter-add
             # per level.  Under node sharding `usage` is the shard's
             # partial flat counter (both directed entries of an overlay
@@ -336,6 +517,10 @@ def execute_plan(
             )
             est = jax.lax.psum(full, "nodes")[:BL]
         x_final = est[plan.final_graph, plan.final_slot]
+        # Byzantine nodes discard the down-pass; churned / permanently
+        # regional-out nodes never hear it — they keep their frozen value
+        if frozen_vals is not None:
+            x_final = jnp.where(freeze_c[0]["frozen"], frozen_vals, x_final)
         node_sends = node_sends[:n]
         if node_mesh:
             node_sends = jax.lax.psum(node_sends, "nodes")
@@ -344,7 +529,7 @@ def execute_plan(
         return (
             x_final, node_sends,
             tuple(lvl_msgs), jnp.stack(lvl_ticks), jnp.stack(lvl_conv),
-            tuple(usages),
+            tuple(usages), tuple(lvl_retx), tuple(lvl_cong),
         )
 
     # throwaway padding trials bring T up to a mesh-device multiple
@@ -359,12 +544,16 @@ def execute_plan(
         jnp.asarray(maxt_levels, jnp.int32),
     )
     cache_key = (
-        T, per_trial_x0, weighted, loss_p, backend, schedule, mesh, interpret,
-        tuple(chk_levels), collect_usage,
+        T, per_trial_x0, weighted, failures, cost, backend, schedule, mesh,
+        interpret, tuple(chk_levels), collect_usage,
     )
     fn = plan.exec_cache.get(cache_key)
     if fn is None:
         consts.extend(_level_consts(lp) for lp in plan.levels)
+        if scenario:
+            ctxs, freeze = _failure_consts(plan, failures, maxt_levels, n)
+            fail_ctxs.extend(ctxs)
+            freeze_c.append(freeze)
         if T == 1 and mesh is None:
             # single-trial fast path: the batching interpreter roughly
             # doubles trace time and XLA pays for size-1 batch dims on
@@ -389,7 +578,7 @@ def execute_plan(
                     out_specs=(
                         Pt, Pt,
                         tuple(P("trials", "nodes") for _ in plan.levels),
-                        Pt, Pt, (),
+                        Pt, Pt, (), (), (),
                     ),
                     check_rep=False,
                 )
@@ -406,11 +595,13 @@ def execute_plan(
         except Exception:  # options unsupported on this backend
             fn = jitted
         plan.exec_cache[cache_key] = fn
-    xf, sends, lm, lt, lc, usages = fn(*args)
+    xf, sends, lm, lt, lc, usages, lretx, lcong = fn(*args)
     if pad:
         xf, sends, lt, lc = xf[:T], sends[:T], lt[:T], lc[:T]
         lm = tuple(m[:T] for m in lm)
         usages = tuple(u[:T] for u in usages)
+        lretx = tuple(r[:T] for r in lretx)
+        lcong = tuple(cg[:T] for cg in lcong)
     # host-side int64 reduction of the per-graph int32 counters (under
     # node sharding the per-level column count is nd*ceil(B/nd) with
     # zero-contribution duplicates — slice to the true B before summing)
@@ -431,4 +622,6 @@ def execute_plan(
         level_converged=np.asarray(lc, np.float64),
         edge_usage=[np.asarray(u) for u in usages],
         backend=backend,
+        cost=_price_levels(
+            cost, plan, n, level_messages, messages, lretx, lcong),
     )

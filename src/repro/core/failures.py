@@ -8,8 +8,15 @@
 
 * Message-loss model: a transmission failing means the message is gone.
   This changes the trajectory and destroys mass; it is implemented
-  inside the gossip engine (`loss_p=`) and path averaging (`loss_p=`),
-  per §VI-C-2.
+  inside the gossip engine (`FailureModel(loss_p=...)`) and path
+  averaging (`loss_p=`), per §VI-C-2.
+
+.. deprecated::
+   `handshake_cost` is superseded by `core.medium.price_messages` /
+   `CostModel(retransmit_p=...)`, which price per trial and per level
+   (and, threaded through `execute_plan`, directly on the presampled
+   schedule with congestion and hop-distance awareness).  It is kept
+   for the historical scalar API.
 """
 from __future__ import annotations
 

@@ -83,6 +83,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .medium import _TAG_RETX, _TAG_STRAGGLER, CostModel, FailureCtx
 from .schedule import (
     CsrGraphs,
     compose_schedule,
@@ -153,11 +154,18 @@ def gossip_core(
     schedule: str = "presampled",
     interpret: bool = False,
     node_shard=None,
+    failure_ctx: Optional[FailureCtx] = None,
+    cost_model: Optional[CostModel] = None,
+    hop_cap: int = 1,
 ):
     """Pure-JAX batched gossip loop; composable under jit and vmap.
 
     Returns (x, usage, msgs, done, ticks) where usage is the flat
-    ``(nnz+1,)`` per-directed-edge counter aligned with `adj`.
+    ``(nnz+1,)`` per-directed-edge counter aligned with `adj`; with
+    `cost_model` set, two extra per-graph arrays are appended —
+    (retransmissions, congestion_pairs) — priced from the presampled
+    schedule with RNG streams disjoint from the exchange streams, so
+    x/usage/msgs/done/ticks are bitwise-independent of the cost model.
     `backend` selects the inner pairwise-average kernel and `schedule`
     the presampled vs legacy per-tick execution (see module docstring);
     the random exchange sequence, usage, and message counts are
@@ -165,6 +173,14 @@ def gossip_core(
     traced scalars (the plan/execute engine passes them at runtime so
     eps-oracle and fixed-iteration runs share one compilation);
     `check_every` must be static (scan length).
+
+    `failure_ctx` (a `medium.FailureCtx`) perturbs the presampled
+    schedule — churned/regional nodes' exchanges vanish (a live
+    initiator contacting a down partner wastes the forward leg),
+    straggler exchanges fail w.p. 1 - straggler_success at full cost,
+    Byzantine slots never apply updates.  This DOES change trajectory
+    and accounting (that is the point); requires
+    ``schedule="presampled"``.
 
     `node_shard=(cols, ok)` runs only the given global batch columns:
     `x0`/`node_mask` are the local ``(Bs, C, …)`` slices, sampling stays
@@ -180,6 +196,15 @@ def gossip_core(
         raise ValueError("backend='matmul' requires schedule='presampled'")
     if node_shard is not None and schedule != "presampled":
         raise ValueError("node_shard requires schedule='presampled'")
+    if (failure_ctx is not None or cost_model is not None):
+        if schedule != "presampled":
+            raise ValueError(
+                "failure scenarios / cost pricing require "
+                "schedule='presampled'")
+        if node_shard is not None:
+            raise ValueError(
+                "failure scenarios / cost pricing are not supported on "
+                "the (trials, nodes) mesh")
     live = node_mask.astype(x0.dtype)[..., None]  # (B, C, 1)
     denom = jnp.maximum(live.sum(1), 1.0)
     mean = (x0 * live).sum(1) / denom             # (B, V)
@@ -197,31 +222,55 @@ def gossip_core(
     else:
         chunk = _presampled_chunk(
             adj, key, loss_p, check_every, backend, interpret, err, tol,
-            node_shard,
+            node_shard, failure_ctx, cost_model, hop_cap,
         )
 
     def cond(carry):
-        *_, done, _ticks, t0 = carry
-        return (~jnp.all(done)) & (t0 < max_ticks)
+        return (~jnp.all(carry[3])) & (carry[-1] < max_ticks)
 
     usage0 = jnp.zeros(adj.nbr.shape, jnp.int32)
     msgs0 = jnp.zeros(x0.shape[:1], jnp.int32)
     done0 = err(x0) <= tol  # already-converged graphs (e.g. 1-node cells)
     ticks0 = jnp.zeros(x0.shape[:1], jnp.int32)
-    carry = (x0, usage0, msgs0, done0, ticks0, jnp.array(0, jnp.int32))
-    x, usage, msgs, done, ticks, _ = jax.lax.while_loop(cond, chunk, carry)
-    return x, usage, msgs, done, ticks
+    if cost_model is not None:
+        # per-graph cost accumulators: sampled extra attempts (int32,
+        # exact) and concurrency pair counts (f32: a surcharge tally,
+        # not an exact-accounting channel)
+        extras = (jnp.zeros(x0.shape[:1], jnp.int32),
+                  jnp.zeros(x0.shape[:1], jnp.float32))
+    else:
+        extras = ()
+    carry = (x0, usage0, msgs0, done0, ticks0) + extras \
+        + (jnp.array(0, jnp.int32),)
+    out = jax.lax.while_loop(cond, chunk, carry)
+    return out[:-1]  # drop the tick counter t0
 
 
 def _presampled_chunk(adj, key, loss_p, check_every, backend, interpret,
-                      err, tol, node_shard=None):
+                      err, tol, node_shard=None, failure_ctx=None,
+                      cost_model=None, hop_cap=1):
     """Chunk body for the schedule/value split: one batched RNG pass for
     the whole chunk, accounting as a single scatter-add + reduction,
-    then the value pass over the presampled pair list."""
+    then the value pass over the presampled pair list.
+
+    `failure_ctx` perturbs the schedule before the value pass (scenario
+    injection); `cost_model` adds pure reductions over the schedule
+    (sampled retransmissions, concurrency pairs) whose RNG streams are
+    folded from tags disjoint from every tick index, so the exchange
+    draws — and therefore x/usage/msgs — are untouched.
+    """
     from repro.kernels.pair_apply import pair_apply, pair_apply_ref
 
+    cost_on = cost_model is not None
+    sample_retx = (cost_on and cost_model.sample
+                   and cost_model.retransmit_p < 1.0)
+    track_cong = cost_on and cost_model.congestion_alpha > 0.0
+
     def chunk(carry):
-        x, usage, msgs, done, ticks, t0 = carry
+        if cost_on:
+            x, usage, msgs, done, ticks, retx, congp, t0 = carry
+        else:
+            x, usage, msgs, done, ticks, t0 = carry
         C = x.shape[1]
         ts = t0 + jnp.arange(check_every)
         s = sample_schedule(ts, key, adj, loss_p, x.dtype)
@@ -230,10 +279,55 @@ def _presampled_chunk(adj, key, loss_p, check_every, backend, interpret,
             s = type(s)(*(f[:, cols] for f in s))
             s = s._replace(valid=s.valid & ok[None, :])
         active = s.valid & ~done[None, :]   # done is frozen within a chunk
-        upd_j = active & s.fwd_ok
-        upd_i = upd_j & s.rep_ok
-        usage = usage.at[s.pos].add(active.astype(jnp.int32))
-        msgs = msgs + jnp.where(active, s.cost, 0).sum(0)
+        if failure_ctx is None:
+            attempt = active
+            cost_t = s.cost
+            upd_j = active & s.fwd_ok
+            upd_i = upd_j & s.rep_ok
+        else:
+            fc = failure_ctx
+            bcols = jnp.arange(active.shape[1])[None, :]
+            when = ts[:, None]
+            churn_now = when >= fc.churn_tick
+            reg_now = (when >= fc.reg_t0) & (when < fc.reg_t1)
+            down_i = (fc.churned[bcols, s.i] & churn_now) | (
+                fc.regional[bcols, s.i] & reg_now)
+            down_j = (fc.churned[bcols, s.j] & churn_now) | (
+                fc.regional[bcols, s.j] & reg_now)
+            attempt = active & ~down_i      # a down initiator never wakes
+            delivered = attempt & ~down_j
+            slow = fc.straggler[bcols, s.i] | fc.straggler[bcols, s.j]
+            if fc.straggler_success < 1.0:
+                ku = jax.random.fold_in(
+                    jax.random.fold_in(key, _TAG_STRAGGLER), t0)
+                u = jax.random.uniform(ku, active.shape)
+                delivered = delivered & (
+                    ~slow | (u < fc.straggler_success))
+            upd_j = delivered & s.fwd_ok & ~fc.byz[bcols, s.j]
+            upd_i = delivered & s.fwd_ok & s.rep_ok & ~fc.byz[bcols, s.i]
+            # a wasted contact of a down partner still transmits the
+            # forward leg; straggler stalls burn the full exchange cost
+            cost_t = jnp.where(attempt & ~down_j, s.cost, adj.hops[s.pos])
+        usage = usage.at[s.pos].add(attempt.astype(jnp.int32))
+        hops_t = jnp.where(attempt, cost_t, 0)
+        msgs = msgs + hops_t.sum(0)
+        if sample_retx:
+            # iid Geometric(p) per single-hop transmission: extra
+            # attempts per hop slot, masked to the hops actually sent.
+            # The stream is fold_in(key, TAG) -> fold_in(., t0): tagged
+            # before the tick fold, disjoint from exchange draws.
+            kr = jax.random.fold_in(jax.random.fold_in(key, _TAG_RETX), t0)
+            q = 1.0 - cost_model.retransmit_p
+            u = jnp.maximum(
+                jax.random.uniform(kr, (*hops_t.shape, 2 * hop_cap)), 1e-12)
+            g = jnp.floor(jnp.log(u) / jnp.log(q)).astype(jnp.int32)
+            m = jnp.arange(2 * hop_cap)[None, None, :] < hops_t[..., None]
+            retx = retx + jnp.where(m, g, 0).sum((0, 2))
+        if track_cong:
+            conc = attempt.sum(1)  # concurrent exchanges at each tick
+            congp = congp + (
+                attempt * jnp.maximum(conc - 1, 0)[:, None]
+            ).sum(0).astype(jnp.float32)
         if backend == "lax":
             x = pair_apply_ref(x, s.i, s.j, upd_i, upd_j)
         elif backend == "pallas":
@@ -249,7 +343,10 @@ def _presampled_chunk(adj, key, loss_p, check_every, backend, interpret,
                             interpret=interpret)
         ticks = ticks + jnp.where(done, 0, check_every)
         done = done | (err(x) <= tol)
-        return (x, usage, msgs, done, ticks, t0 + check_every)
+        out = (x, usage, msgs, done, ticks)
+        if cost_on:
+            out = out + (retx, congp)
+        return out + (t0 + check_every,)
 
     return chunk
 

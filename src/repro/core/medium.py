@@ -1,0 +1,266 @@
+"""Wireless-medium transmission-cost and failure models.
+
+The paper's systems argument is that multiscale gossip wins *on the
+wireless medium* — link-level ACKs, retransmissions, and congestion —
+not just on raw message counts (§VI-C; Nokleby et al. price consensus in
+energy and bandwidth, Dimakis et al.'s geographic gossip prices by hop
+distance).  This module prices the presampled exchange schedule
+directly:
+
+* `CostModel` — per-hop energy, iid-Geometric(p) link-level
+  retransmissions, and a congestion surcharge for concurrent exchanges
+  sharing the medium.  Pricing is a **pure reduction over the
+  presampled ``(T, B)`` schedule arrays** (plus the plan's per-edge
+  route hops, already folded into ``ExchangeSchedule.cost``): the
+  retransmission draws come from an RNG stream independent of the
+  exchange stream, so turning the cost model on NEVER perturbs the
+  bitwise exchange trajectory (x / usage / messages are identical with
+  the model on or off).  This replaces the post-hoc
+  `core.failures.handshake_cost` scalar with per-trial, per-level
+  pricing attached to `EngineResult.cost`.
+
+* `FailureModel` — the declarative failure/churn surface threaded
+  through `multiscale_gossip` → `execute_plan` → `gossip_core`.
+  `loss_p` is the paper's §VI-C-2 message-loss model (unchanged
+  semantics, bitwise-compatible with the legacy ``loss_p=`` kwarg); the
+  scenario fields (churn, stragglers, regional outage, Byzantine
+  dropped updates) *perturb the presampled schedule* — masking which
+  exchanges happen and which updates apply — and replay the value pass,
+  so a scenario run is exactly the reliable run's schedule with events
+  injected.  Scenario event times are fractions of the finest level's
+  tick budget, so they are well-defined under fixed-iterations mode
+  (``fixed_ticks_scale > 0``); churned nodes stay down for all coarser
+  levels.
+
+Both dataclasses are frozen/hashable (they participate in the
+compiled-executor cache key), mirroring the dist layer's `SyncConfig`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import numpy as np
+
+__all__ = [
+    "CostModel",
+    "FailureModel",
+    "MediumCost",
+    "FailureCtx",
+    "expected_retransmissions",
+    "price_messages",
+    "failure_sets",
+]
+
+# RNG stream tags for cost/perturbation draws: folded into the level key
+# BEFORE the per-tick fold, so these streams are disjoint from the
+# exchange streams (fold_in(key, t)) by construction — extra draws from
+# them cannot perturb any exchange decision.
+_TAG_RETX = 2_147_483_640
+_TAG_STRAGGLER = 2_147_483_641
+
+
+@dataclasses.dataclass(frozen=True)
+class CostModel:
+    """Wireless transmission pricing (static, hashable).
+
+    hop_energy: energy units per physical single-hop transmission.
+    retransmit_p: per-attempt link-level delivery probability; each
+        logical single-hop transmission physically takes Geometric(p)
+        attempts (ACK/retransmit until delivery, the handshake model of
+        §VI-C-1).  1.0 disables retransmissions.
+    congestion_alpha: energy surcharge, per active exchange and per
+        OTHER exchange concurrent with it at the same tick of the same
+        level (the level's cells share the radio medium) — the
+        surcharge for one exchange at a tick with c concurrent
+        exchanges is ``hop_energy * congestion_alpha * (c - 1)``.
+    sample: True samples the Geometric retransmissions inside the
+        schedule reduction (independent RNG stream, bitwise-neutral);
+        False prices them with the closed-form mean ``T * (1-p)/p``.
+    """
+
+    hop_energy: float = 1.0
+    retransmit_p: float = 1.0
+    congestion_alpha: float = 0.0
+    sample: bool = True
+
+    def __post_init__(self):
+        if not 0.0 < self.retransmit_p <= 1.0:
+            raise ValueError(
+                f"retransmit_p must be in (0, 1], got {self.retransmit_p}")
+        if self.hop_energy < 0 or self.congestion_alpha < 0:
+            raise ValueError("hop_energy / congestion_alpha must be >= 0")
+
+
+@dataclasses.dataclass(frozen=True)
+class FailureModel:
+    """Failure/churn surface (static, hashable).
+
+    loss_p: per-hop message delivery probability (paper §VI-C-2; a lost
+        request aborts the exchange, a lost reply leaves only the
+        contacted node updated).  None = reliable.  Bitwise-identical
+        to the legacy ``loss_p=`` kwarg.
+    churn_fraction / churn_time: `churn_fraction` of the nodes leave
+        the network at `churn_time` (fraction of the finest level's
+        tick budget) and stay down for the rest of the run — their
+        exchanges vanish; a live node contacting a churned partner
+        wastes the forward-leg transmissions.
+    straggler_fraction / straggler_success: stragglers' exchanges
+        succeed only w.p. `straggler_success` per attempt (slow or
+        heterogeneous links); failed attempts are still priced at full
+        exchange cost (the link stalls, the radios transmitted).
+    regional_radius / regional_window: nodes within `regional_radius`
+        of a random epicenter are down during
+        ``[window[0], window[1])`` (fractions of the finest level's
+        budget) — a correlated regional outage.  ``window[1] > 1``
+        makes the outage permanent (persists through coarser levels).
+    drop_fraction: Byzantine/dropped updates — the flagged nodes never
+        apply incoming updates (their stale value keeps leaking into
+        the average, the paper's mass-distortion failure).  The
+        mass-weighted variant (``weighted=True``) is the EF-style
+        recovery story: values travel as (w·x, w) pairs, so a frozen
+        node distorts the fused mean by at most its own share.
+    seed: failure-injection RNG (node selection, epicenter draw) —
+        independent of the gossip seed.
+    """
+
+    loss_p: Optional[float] = None
+    churn_fraction: float = 0.0
+    churn_time: float = 0.5
+    straggler_fraction: float = 0.0
+    straggler_success: float = 0.25
+    regional_radius: float = 0.0
+    regional_window: tuple = (0.25, 0.75)
+    drop_fraction: float = 0.0
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.loss_p is not None and not 0.0 < self.loss_p <= 1.0:
+            raise ValueError(f"loss_p must be in (0, 1], got {self.loss_p}")
+        for name in ("churn_fraction", "straggler_fraction", "drop_fraction"):
+            v = getattr(self, name)
+            if not 0.0 <= v <= 1.0:
+                raise ValueError(f"{name} must be in [0, 1], got {v}")
+        if not 0.0 < self.straggler_success <= 1.0:
+            raise ValueError("straggler_success must be in (0, 1]")
+
+    @property
+    def has_scenario(self) -> bool:
+        """True when any schedule-perturbing field is active (loss_p
+        alone is the legacy trajectory-level model, not a scenario)."""
+        return (
+            self.churn_fraction > 0
+            or self.straggler_fraction > 0
+            or self.regional_radius > 0
+            or self.drop_fraction > 0
+        )
+
+
+class FailureCtx(NamedTuple):
+    """Per-level device arrays + static windows for scenario perturbation.
+
+    Built by the engine from `failure_sets` mapped through the level's
+    `slot_node`; consumed by `gossip_core`'s presampled chunk.
+    """
+
+    churned: object      # (B, C) bool — slot leaves at churn_tick
+    straggler: object    # (B, C) bool
+    byz: object          # (B, C) bool — never applies updates
+    regional: object     # (B, C) bool — down during [reg_t0, reg_t1)
+    churn_tick: int      # static, level-local ticks
+    reg_t0: int          # static
+    reg_t1: int          # static
+    straggler_success: float  # static
+
+
+@dataclasses.dataclass
+class MediumCost:
+    """Per-trial priced cost of one plan execution (T trials).
+
+    All arrays are host-side float64; `transmissions` equals the
+    engine's logical message count (single-hop transmissions including
+    the dissemination down-pass) — pricing never changes it.
+    """
+
+    transmissions: np.ndarray      # (T,) logical single-hop transmissions
+    retransmissions: np.ndarray    # (T,) extra physical attempts
+    congestion: np.ndarray         # (T,) concurrency surcharge, energy units
+    energy: np.ndarray             # (T,) total energy
+    level_energy: np.ndarray       # (T, L) per executed level (no down-pass)
+    model: CostModel
+
+    @property
+    def physical_transmissions(self) -> np.ndarray:
+        return self.transmissions + self.retransmissions
+
+
+def expected_retransmissions(transmissions, p: float) -> np.ndarray:
+    """Closed-form mean extra attempts for `transmissions` logical
+    single-hop transmissions: each takes Geometric(p) physical attempts
+    (mean 1/p), so the extra attempts sum to ``T * (1 - p) / p``."""
+    if not 0.0 < p <= 1.0:
+        raise ValueError(f"retransmit_p must be in (0, 1], got {p}")
+    return np.asarray(transmissions, np.float64) * (1.0 - p) / p
+
+
+def price_messages(
+    messages,
+    model: CostModel,
+    rng: Optional[np.random.Generator] = None,
+) -> MediumCost:
+    """Price a plain message count (scalar or per-trial array) without a
+    schedule — the host-side path for baselines (e.g. path averaging)
+    whose executors do not run the presampled reduction.  Congestion is
+    0 (no concurrency information in a bare count).
+
+    Supersedes `core.failures.handshake_cost`: the handshake total
+    ``T + NegBinomial(T, p)`` is exactly `transmissions +
+    retransmissions` here.
+    """
+    msgs = np.atleast_1d(np.asarray(messages, np.int64))
+    p = model.retransmit_p
+    if p >= 1.0:
+        retx = np.zeros(msgs.shape, np.float64)
+    elif model.sample:
+        rng = rng or np.random.default_rng(0)
+        retx = np.array(
+            [float(rng.negative_binomial(int(m), p)) if m > 0 else 0.0
+             for m in msgs])
+    else:
+        retx = expected_retransmissions(msgs, p)
+    cong = np.zeros(msgs.shape, np.float64)
+    energy = model.hop_energy * (msgs + retx)
+    return MediumCost(
+        transmissions=msgs.astype(np.float64), retransmissions=retx,
+        congestion=cong, energy=energy,
+        level_energy=energy[:, None], model=model,
+    )
+
+
+def failure_sets(model: FailureModel, n: int, coords=None) -> dict:
+    """Draw the failure-injection node sets (host, deterministic in
+    `model.seed`): boolean (n,) masks for churned / straggler / byz /
+    regional nodes, plus the regional epicenter.  The draw order is
+    fixed so adding one scenario field never reshuffles another's set.
+    """
+    rng = np.random.default_rng(model.seed)
+
+    def pick(frac):
+        m = np.zeros(n, bool)
+        k = int(round(frac * n))
+        if k > 0:
+            m[rng.choice(n, size=min(k, n), replace=False)] = True
+        return m
+
+    churned = pick(model.churn_fraction)
+    straggler = pick(model.straggler_fraction)
+    byz = pick(model.drop_fraction)
+    epicenter = rng.uniform(0.0, 1.0, 2)
+    regional = np.zeros(n, bool)
+    if model.regional_radius > 0 and coords is not None:
+        d = np.linalg.norm(np.asarray(coords) - epicenter[None, :], axis=1)
+        regional = d < model.regional_radius
+    return {
+        "churned": churned, "straggler": straggler, "byz": byz,
+        "regional": regional, "epicenter": epicenter,
+    }

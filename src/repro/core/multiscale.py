@@ -45,6 +45,8 @@ from typing import Optional, Union
 import numpy as np
 
 from .engine import EngineResult, execute_plan, trials_error
+from .medium import CostModel, FailureModel, MediumCost
+from .options import UNSET, ExecOptions, resolve_exec_args
 from .partition import Partition
 from .plan import HierarchyPlan, build_plan
 from .rgg import Graph
@@ -77,6 +79,7 @@ class MultiscaleResult:
     rep_counts: np.ndarray    # (n,) #times each node served as representative
     disconnected_cells: int   # finest-level cells whose subgraph was disconnected
     partition: Partition
+    cost: Optional[MediumCost] = None  # priced medium cost (CostModel runs)
 
     def error(self, x0: np.ndarray) -> float:
         """Paper's final relative error ||x_final - avg|| / ||x0||."""
@@ -98,6 +101,7 @@ class MultiscaleTrials:
     disconnected_cells: int
     partition: Partition
     backend: str
+    cost: Optional[MediumCost] = None  # per-trial priced cost (CostModel runs)
 
     @property
     def trials(self) -> int:
@@ -142,25 +146,40 @@ def multiscale_gossip(
     rep_mode: str = "random",
     weighted: bool = False,
     fixed_ticks_scale: float = 0.0,
-    loss_p: Optional[float] = None,
-    max_ticks_per_level: int = 2_000_000,
     trials: int = 1,
-    backend: str = "lax",
-    schedule: str = "presampled",
-    mesh=None,
     plan: Optional[HierarchyPlan] = None,
+    options: Optional[ExecOptions] = None,
+    failures: Optional[FailureModel] = None,
+    cost: Optional[CostModel] = None,
+    # -- deprecated flat kwargs (one-PR shim; see core.options) ----------
+    loss_p=UNSET,
+    max_ticks_per_level=UNSET,
+    backend=UNSET,
+    schedule=UNSET,
+    mesh=UNSET,
 ) -> Union[MultiscaleResult, MultiscaleTrials]:
     """Run multiscale gossip (Alg. 1); see module docstring.
 
     With `trials=T` all T trials execute in one compiled vmapped call
-    (seeds `seed .. seed+T-1`) and a `MultiscaleTrials` is returned;
-    `mesh=` (1-axis device mesh) shards that trial axis over devices.
+    (seeds `seed .. seed+T-1`) and a `MultiscaleTrials` is returned.
     Pass `plan=` to reuse a prebuilt `HierarchyPlan` (then `k`, `a`,
     `cell_max`, `rep_mode` are taken from the plan and `seed` only
-    drives the gossip randomness).  `backend`/`schedule` select the
-    inner gossip kernel and presampled-vs-legacy execution (see
-    `core.gossip`).
+    drives the gossip randomness).
+
+    `options` (`ExecOptions`) selects backend / schedule / mesh / check
+    cadence / tick budget; `failures` (`FailureModel`) carries the
+    paper's loss model plus churn / straggler / regional / Byzantine
+    scenarios; `cost` (`CostModel`) prices the run onto the wireless
+    medium into `.cost` without perturbing the exchange trajectory.
+    The historical flat kwargs (``backend=``, ``schedule=``, ``mesh=``,
+    ``loss_p=``, ``max_ticks_per_level=``) remain accepted for one
+    deprecation window and produce bitwise-identical results.
     """
+    options, failures = resolve_exec_args(
+        options, failures,
+        dict(loss_p=loss_p, max_ticks_per_level=max_ticks_per_level,
+             backend=backend, schedule=schedule, mesh=mesh),
+    )
     if plan is None:
         plan = build_plan(
             g, k=k, a=a, cell_max=cell_max, seed=seed, rep_mode=rep_mode
@@ -169,9 +188,8 @@ def multiscale_gossip(
     seeds = tuple(int(seed) + t for t in range(trials))
     res = execute_plan(
         plan, x0, eps=eps, seeds=seeds, weighted=weighted,
-        fixed_ticks_scale=fixed_ticks_scale, loss_p=loss_p,
-        max_ticks_per_level=max_ticks_per_level, backend=backend,
-        schedule=schedule, mesh=mesh,
+        fixed_ticks_scale=fixed_ticks_scale,
+        options=options, failures=failures, cost=cost,
     )
     reports = _level_reports(plan, res, n)
     if trials == 1:
@@ -183,6 +201,7 @@ def multiscale_gossip(
             rep_counts=plan.rep_counts.copy(),
             disconnected_cells=plan.disconnected_cells,
             partition=plan.partition,
+            cost=res.cost,
         )
     return MultiscaleTrials(
         x_final=res.x_final,
@@ -193,5 +212,6 @@ def multiscale_gossip(
         rep_counts=plan.rep_counts.copy(),
         disconnected_cells=plan.disconnected_cells,
         partition=plan.partition,
-        backend=backend,
+        backend=options.backend,
+        cost=res.cost,
     )

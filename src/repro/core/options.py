@@ -1,0 +1,113 @@
+"""Execution options for the plan/execute simulation core.
+
+`ExecOptions` is the single static (hashable) config surface for HOW a
+plan is executed — backend, schedule mode, sharding mesh, convergence
+check cadence, tick budget — mirroring the dist layer's `SyncConfig` →
+`SyncPlan` pattern.  WHAT is simulated stays in positional/semantic
+arguments (`eps`, `seeds`, `weighted`, `fixed_ticks_scale`) and the two
+sibling dataclasses `FailureModel` / `CostModel` (`core.medium`).
+
+The historical flat kwargs (``backend=``, ``schedule=``, ``mesh=``,
+``interpret=``, ``check_every=``, ``max_ticks_per_level=``,
+``collect_usage=``, ``loss_p=``) remain accepted by `execute_plan` /
+`multiscale_gossip` for one deprecation window: they raise a
+`DeprecationWarning` and are folded into `ExecOptions` /
+`FailureModel`, producing bitwise-identical results to the new call
+form (asserted by tests/test_medium_scenarios.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Any, Optional
+
+from .medium import FailureModel
+
+__all__ = ["ExecOptions", "UNSET", "resolve_exec_args"]
+
+# distinguishes "kwarg not passed" from an explicit None (loss_p=None
+# and interpret=None are meaningful values)
+UNSET: Any = type("_Unset", (), {"__repr__": lambda s: "UNSET"})()
+
+_ENGINE_BACKENDS = ("lax", "pallas", "matmul")
+_SCHEDULES = ("presampled", "per_tick")
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecOptions:
+    """Static (hashable) description of how to execute a plan.
+
+    backend: inner pairwise-average kernel — "lax" (reference scan),
+        "pallas" (TPU pair_apply kernel), "matmul" (log2(T) MXU
+        composition).
+    schedule: "presampled" (schedule/value split, the default) or
+        "per_tick" (legacy sequential scan, the parity reference).
+    mesh: optional `jax.sharding.Mesh` — 1-axis shards the trial axis;
+        a 2-axis ``("trials", "nodes")`` mesh also blocks node batches.
+    interpret: run Pallas kernels in interpret mode; None = auto
+        (interpret off only on real TPUs).
+    check_every: convergence-oracle cadence (static scan length).
+    max_ticks_per_level: per-level tick budget in eps-oracle mode.
+    collect_usage: also return the raw per-level flat exchange
+        counters (attribution audits; off on the hot path).
+    """
+
+    backend: str = "lax"
+    schedule: str = "presampled"
+    mesh: Optional[Any] = None
+    interpret: Optional[bool] = None
+    check_every: int = 64
+    max_ticks_per_level: int = 2_000_000
+    collect_usage: bool = False
+
+    def __post_init__(self):
+        if self.backend not in _ENGINE_BACKENDS:
+            raise ValueError(
+                f"unknown backend {self.backend!r}; "
+                f"expected one of {_ENGINE_BACKENDS}")
+        if self.schedule not in _SCHEDULES:
+            raise ValueError(
+                f"unknown schedule mode {self.schedule!r}; "
+                f"expected one of {_SCHEDULES}")
+        if self.check_every < 1:
+            raise ValueError("check_every must be >= 1")
+
+
+def resolve_exec_args(
+    options: Optional[ExecOptions],
+    failures: Optional[FailureModel],
+    legacy: dict,
+    *,
+    stacklevel: int = 3,
+) -> tuple[ExecOptions, Optional[FailureModel]]:
+    """Fold deprecated flat kwargs into (ExecOptions, FailureModel).
+
+    `legacy` maps kwarg name -> value, with UNSET marking "not passed".
+    Passing a legacy kwarg warns; passing one alongside an explicit
+    `options=` / `failures=` object is ambiguous and raises.
+    """
+    given = {k: v for k, v in legacy.items() if v is not UNSET}
+    if given:
+        warnings.warn(
+            f"the flat kwargs {sorted(given)} are deprecated; pass "
+            "options=ExecOptions(...) and failures=FailureModel(...) "
+            "instead (repro.core.options / repro.core.medium)",
+            DeprecationWarning, stacklevel=stacklevel,
+        )
+    loss_p = given.pop("loss_p", UNSET)
+    if given:
+        if options is not None:
+            raise ValueError(
+                f"both options=ExecOptions(...) and the deprecated kwargs "
+                f"{sorted(given)} were passed; use one call form")
+        options = ExecOptions(**given)
+    elif options is None:
+        options = ExecOptions()
+    if loss_p is not UNSET:
+        if failures is not None:
+            raise ValueError(
+                "both failures=FailureModel(...) and the deprecated "
+                "loss_p= kwarg were passed; use one call form")
+        if loss_p is not None:
+            failures = FailureModel(loss_p=float(loss_p))
+    return options, failures

@@ -32,7 +32,12 @@ from typing import Optional
 
 import numpy as np
 
-from repro.core import build_plan, execute_plan, random_geometric_graph
+from repro.core import (
+    ExecOptions,
+    build_plan,
+    execute_plan,
+    random_geometric_graph,
+)
 from repro.dist.topology import suggest_levels
 
 __all__ = ["LOAD_FIELDS", "RoundResult", "ControlPlane"]
@@ -144,7 +149,7 @@ class ControlPlane:
         res = execute_plan(
             self.plan, x0, eps=self.eps, seeds=[seed] * T,
             fixed_ticks_scale=self.fixed_ticks_scale, weighted=True,
-            backend=self.backend,
+            options=ExecOptions(backend=self.backend),
         )
         messages = int(res.messages[0])
         assert int(res.messages.min()) == int(res.messages.max()), (

@@ -1,0 +1,266 @@
+"""Wireless-medium cost model + failure-scenario matrix + the unified
+ExecOptions/FailureModel/CostModel API (core.medium / core.options /
+core.scenarios).
+
+The load-bearing invariants:
+
+* cost pricing is a pure reduction over the presampled schedule — the
+  exchange trajectory (x / usage / messages) is bitwise-identical with
+  the CostModel on or off;
+* sampled Geometric retransmissions agree with the closed form
+  ``T * (1-p)/p`` in expectation, and the closed-form mode returns it
+  exactly;
+* hop-distance pricing matches the independent route-incidence total
+  ``sum(usage * 2 * hops)`` computed from the plan CSR;
+* the deprecated flat kwargs warn and produce bitwise-identical
+  EngineResults to the options=/failures= call form;
+* scenarios perturb the replayed schedule in the physically sensible
+  direction (churn reduces messages, Byzantine nodes keep their values).
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    CostModel,
+    ExecOptions,
+    FailureModel,
+    build_plan,
+    execute_plan,
+    expected_retransmissions,
+    multiscale_gossip,
+    price_messages,
+    random_geometric_graph,
+    run_scenario_matrix,
+    scenario_matrix,
+)
+from repro.core.medium import failure_sets
+
+N = 160
+SEEDS = (0, 1)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    g = random_geometric_graph(N, seed=5)
+    plan = build_plan(g, k=2, seed=0)
+    x0 = np.random.default_rng(2).normal(0, 1, N).astype(np.float32)
+    return g, plan, x0
+
+
+def _run(plan, x0, **kw):
+    kw.setdefault("eps", 1e-3)
+    kw.setdefault("seeds", SEEDS)
+    kw.setdefault("fixed_ticks_scale", 0.25)
+    return execute_plan(plan, x0, **kw)
+
+
+def test_cost_pricing_is_bitwise_neutral(setup):
+    g, plan, x0 = setup
+    base = _run(plan, x0, options=ExecOptions(collect_usage=True))
+    priced = _run(
+        plan, x0, options=ExecOptions(collect_usage=True),
+        cost=CostModel(retransmit_p=0.7, congestion_alpha=0.2),
+    )
+    assert np.array_equal(base.x_final, priced.x_final)
+    assert np.array_equal(base.messages, priced.messages)
+    assert np.array_equal(base.node_sends, priced.node_sends)
+    for u0, u1 in zip(base.edge_usage, priced.edge_usage):
+        assert np.array_equal(u0, u1)
+    assert base.cost is None
+    assert priced.cost is not None
+    assert np.array_equal(
+        priced.cost.transmissions, base.messages.astype(np.float64))
+
+
+def test_sampled_retransmissions_match_geometric_mean(setup):
+    g, plan, x0 = setup
+    p = 0.6
+    # many trials, one schedule each: the per-trial sampled extras
+    # should concentrate on T*(1-p)/p within a few percent
+    seeds = tuple(range(24))
+    res = _run(plan, x0, seeds=seeds, cost=CostModel(retransmit_p=p))
+    want = expected_retransmissions(res.messages, p)
+    got = res.cost.retransmissions
+    assert np.all(got >= 0)
+    rel = abs(got.mean() - want.mean()) / want.mean()
+    assert rel < 0.05, (got.mean(), want.mean())
+
+
+def test_closed_form_mode_is_exact(setup):
+    g, plan, x0 = setup
+    p = 0.8
+    res = _run(plan, x0, cost=CostModel(retransmit_p=p, sample=False))
+    np.testing.assert_allclose(
+        res.cost.retransmissions,
+        expected_retransmissions(res.messages, p),
+    )
+    # energy identity: hop_energy * (logical + retx) with no congestion
+    np.testing.assert_allclose(
+        res.cost.energy,
+        res.cost.transmissions + res.cost.retransmissions,
+    )
+
+
+def test_hop_pricing_matches_route_incidence_totals(setup):
+    """The engine's logical message count IS the route-priced total:
+    sum over directed-edge slots of usage * 2 * hops (forward + reply
+    legs), independently recomputed from the plan CSR."""
+    g, plan, x0 = setup
+    res = _run(plan, x0, options=ExecOptions(collect_usage=True))
+    for li, (lp, usage) in enumerate(zip(plan.levels, res.edge_usage)):
+        hops = np.asarray(lp.hop_flat, np.int64)
+        for t in range(len(SEEDS)):
+            priced = int((usage[t].astype(np.int64) * 2 * hops).sum())
+            assert priced == int(res.level_messages[t, li]), (li, t)
+
+
+def test_congestion_counts_concurrent_pairs(setup):
+    """congestion_alpha scales a pure tally: doubling alpha doubles the
+    congestion term and nothing else."""
+    g, plan, x0 = setup
+    a = _run(plan, x0, cost=CostModel(congestion_alpha=0.1, sample=False))
+    b = _run(plan, x0, cost=CostModel(congestion_alpha=0.2, sample=False))
+    np.testing.assert_allclose(2 * a.cost.congestion, b.cost.congestion)
+    np.testing.assert_allclose(
+        b.cost.energy - a.cost.energy, a.cost.congestion)
+
+
+def test_price_messages_supersedes_handshake_cost():
+    from repro.core import handshake_cost
+
+    msgs = 10_000
+    p = 0.5
+    rng_a = np.random.default_rng(7)
+    rng_b = np.random.default_rng(7)
+    legacy = handshake_cost(msgs, p, rng_a)
+    c = price_messages(msgs, CostModel(retransmit_p=p), rng_b)
+    assert int(c.physical_transmissions[0]) == legacy
+    exact = price_messages(msgs, CostModel(retransmit_p=p, sample=False))
+    assert float(exact.retransmissions[0]) == msgs * (1 - p) / p
+
+
+def test_legacy_kwargs_warn_and_match_options(setup):
+    g, plan, x0 = setup
+    new = _run(plan, x0, options=ExecOptions(backend="lax", check_every=32))
+    with pytest.warns(DeprecationWarning, match="deprecated"):
+        old = _run(plan, x0, backend="lax", check_every=32)
+    assert np.array_equal(new.x_final, old.x_final)
+    assert np.array_equal(new.messages, old.messages)
+    assert np.array_equal(new.node_sends, old.node_sends)
+
+
+def test_legacy_loss_p_matches_failure_model(setup):
+    g, plan, x0 = setup
+    new = _run(plan, x0, failures=FailureModel(loss_p=0.9))
+    with pytest.warns(DeprecationWarning, match="loss_p"):
+        old = _run(plan, x0, loss_p=0.9)
+    assert np.array_equal(new.x_final, old.x_final)
+    assert np.array_equal(new.messages, old.messages)
+
+
+def test_ambiguous_call_forms_raise(setup):
+    g, plan, x0 = setup
+    with pytest.raises(ValueError, match="one call form"), \
+            pytest.warns(DeprecationWarning):
+        _run(plan, x0, options=ExecOptions(), backend="lax")
+    with pytest.raises(ValueError, match="one call form"), \
+            pytest.warns(DeprecationWarning):
+        _run(plan, x0, failures=FailureModel(loss_p=0.9), loss_p=0.9)
+
+
+def test_multiscale_gossip_threads_options(setup):
+    g, plan, x0 = setup
+    new = multiscale_gossip(
+        g, x0, eps=1e-3, seed=0, trials=2, plan=plan,
+        options=ExecOptions(backend="lax"),
+    )
+    with pytest.warns(DeprecationWarning):
+        old = multiscale_gossip(
+            g, x0, eps=1e-3, seed=0, trials=2, plan=plan, backend="lax",
+        )
+    assert np.array_equal(new.x_final, old.x_final)
+    assert np.array_equal(new.messages, old.messages)
+
+
+def test_scenario_and_cost_require_presampled(setup):
+    g, plan, x0 = setup
+    with pytest.raises(ValueError, match="presampled"):
+        _run(plan, x0, options=ExecOptions(schedule="per_tick"),
+             cost=CostModel())
+    with pytest.raises(ValueError, match="presampled"):
+        _run(plan, x0, options=ExecOptions(schedule="per_tick"),
+             failures=FailureModel(churn_fraction=0.1))
+
+
+def test_churn_reduces_messages_and_degrades_error(setup):
+    g, plan, x0 = setup
+    base = _run(plan, x0)
+    churned = _run(
+        plan, x0,
+        failures=FailureModel(churn_fraction=0.25, churn_time=0.25),
+    )
+    assert np.all(churned.messages < base.messages)
+    assert churned.error(x0).mean() > base.error(x0).mean()
+
+
+def test_byzantine_nodes_keep_initial_values(setup):
+    """drop_fraction nodes never apply updates: their final estimate is
+    exactly their initial value (V=1: the raw x0 entry)."""
+    g, plan, x0 = setup
+    fm = FailureModel(drop_fraction=0.2, seed=3)
+    res = _run(plan, x0, failures=fm)
+    byz = failure_sets(fm, N)["byz"]
+    assert byz.sum() > 0
+    # unweighted runs promote raw values, so a frozen node stays at x0
+    np.testing.assert_array_equal(
+        res.x_final[:, byz], np.broadcast_to(x0[byz], (len(SEEDS),
+                                                       int(byz.sum()))))
+
+
+def test_failure_sets_draw_order_is_stable():
+    """Adding one scenario field must not reshuffle another's node set."""
+    a = failure_sets(FailureModel(churn_fraction=0.2), 200)
+    b = failure_sets(
+        FailureModel(churn_fraction=0.2, drop_fraction=0.1), 200)
+    np.testing.assert_array_equal(a["churned"], b["churned"])
+
+
+def test_scenario_matrix_smoke(setup):
+    g, plan, x0 = setup
+    res = run_scenario_matrix(
+        g, x0, scenario_matrix(), eps=1e-3, trials=2, seed=0,
+        fixed_ticks_scale=0.25, plan=plan,
+        cost=CostModel(retransmit_p=0.9),
+    )
+    names = [r.scenario.name for r in res]
+    assert names == ["baseline", "churn", "stragglers", "regional",
+                     "byzantine"]
+    by = {r.scenario.name: r for r in res}
+    for r in res:
+        assert r.errors.shape == (2,)
+        assert r.cost is not None and np.all(r.cost.energy > 0)
+    # events hurt: every scenario is at least as bad as the baseline
+    assert by["churn"].err_mean > by["baseline"].err_mean
+    assert by["byzantine"].err_mean > by["baseline"].err_mean
+    # eps-oracle mode rejects (event times are budget fractions)
+    with pytest.raises(ValueError, match="fixed_ticks_scale"):
+        run_scenario_matrix(g, x0, fixed_ticks_scale=0.0, plan=plan)
+
+
+def test_dataclass_validation():
+    with pytest.raises(ValueError):
+        CostModel(retransmit_p=0.0)
+    with pytest.raises(ValueError):
+        CostModel(hop_energy=-1.0)
+    with pytest.raises(ValueError):
+        FailureModel(churn_fraction=1.5)
+    with pytest.raises(ValueError):
+        FailureModel(loss_p=0.0)
+    with pytest.raises(ValueError):
+        ExecOptions(backend="cuda")
+    with pytest.raises(ValueError):
+        ExecOptions(schedule="sometimes")
+    # all three are hashable (compiled-executor cache keys)
+    hash((ExecOptions(), FailureModel(), CostModel()))

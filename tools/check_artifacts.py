@@ -38,6 +38,7 @@ COMMITTED = "fig2_levels"
 SCRATCH = "fig2_levels_check"
 FIG3_BACKENDS = ("lax", "pallas")
 LARGE_N = "large_n_smoke"
+FIG5 = "fig5_smoke"
 # minimum absolute graph_gen_s drift (seconds) that counts as real: the
 # smoke builds in ~0.2s, where scheduler noise alone exceeds 15%
 GRAPH_GEN_FLOOR_S = 0.5
@@ -90,6 +91,82 @@ def check_fig3(tolerance: float) -> list[str]:
                         f"  {name} {algo}@n{n}: messages_mean drifted "
                         f"{rel:.1%} (committed {want:.0f} -> fresh {got:.0f},"
                         f" tolerance {tolerance:.0%})")
+    return failures
+
+
+def check_fig5(tolerance: float) -> list[str]:
+    """Gate the fig5 failure-scenario smoke: achieved error and priced
+    medium cost (energy) per scenario, plus the loss-model error, must
+    stay within tolerance of the committed `fig5_smoke` artifact.
+
+    The smoke is deterministic (shared plan, fixed gossip and
+    failure-injection seeds), so drift means the scenario replay or the
+    cost pricing changed — exactly what this gate is for.
+    """
+    from benchmarks import fig5_failures
+    from benchmarks.common import load_artifact
+
+    committed = load_artifact(FIG5)
+    if committed is None:
+        return [
+            f"  {FIG5}: committed artifact benchmarks/artifacts/{FIG5}.json "
+            f"is missing; run `python -m benchmarks.fig5_failures --n 300 "
+            f"--trials 2 --scenario-trials 2 --ps 0.7,1.0 "
+            f"--artifact {FIG5}` and commit the result"
+        ]
+    sm = committed.get("scenario_matrix") or {}
+    sc_committed = sm.get("scenarios") or {}
+    if len(sc_committed) < 4:
+        return [
+            f"  {FIG5}: committed artifact has {len(sc_committed)} "
+            "scenarios; the gate wants the >=4-scenario matrix — "
+            "regenerate with --scenario-trials > 0"
+        ]
+    ps = tuple(float(p) for p in committed["handshake"])
+    print(f"check_artifacts: re-running fig5 smoke "
+          f"(n={committed['n']}, trials={committed['trials']}, "
+          f"eps={committed['eps']}, scenarios={sorted(sc_committed)}) "
+          f"against {FIG5} (tolerance ±{tolerance:.0%})")
+    fig5_failures.run(
+        n=int(committed["n"]), eps=float(committed["eps"]), ps=ps,
+        trials=int(committed["trials"]), backend=committed["backend"],
+        schedule=committed.get("schedule", "presampled"),
+        scenario_trials=int(sm["trials"]),
+        scenario_scale=float(sm["fixed_ticks_scale"]),
+        scenario_retransmit_p=float(sm["retransmit_p"]),
+        artifact=f"{FIG5}_check",
+    )
+    fresh = load_artifact(f"{FIG5}_check")
+    failures = []
+
+    def gate(label, want, got, floor):
+        rel = abs(got - want) / max(abs(want), floor)
+        status = "ok" if rel <= tolerance else "DRIFT"
+        print(f"  {label}: committed={want:.4g} fresh={got:.4g} "
+              f"rel={rel:+.1%} [{status}]")
+        if rel > tolerance:
+            failures.append(
+                f"  {FIG5} {label}: drifted {rel:.1%} "
+                f"(committed {want:.4g} -> fresh {got:.4g}, "
+                f"tolerance {tolerance:.0%})")
+
+    fresh_sc = (fresh.get("scenario_matrix") or {}).get("scenarios") or {}
+    for name, rec in sc_committed.items():
+        got = fresh_sc.get(name)
+        if got is None:
+            failures.append(f"  {FIG5} scenario {name}: missing from the "
+                            "fresh run")
+            continue
+        # error floor 1e-3: a reliable baseline converges to ~0 where
+        # relative drift is meaningless noise on an already-passing run
+        gate(f"scenario/{name}/err", float(rec["err_mean"]),
+             float(got["err_mean"]), 1e-3)
+        gate(f"scenario/{name}/energy", float(rec["energy_mean"]),
+             float(got["energy_mean"]), 1.0)
+    lm_want = committed["loss_model"]["multiscale"]
+    lm_got = fresh["loss_model"]["multiscale"]
+    gate("loss_model/ms_err", float(lm_want["err"]), float(lm_got["err"]),
+         1e-3)
     return failures
 
 
@@ -170,6 +247,12 @@ def main() -> int:
                          "to 3, the committed profile)")
     ap.add_argument("--skip-fig3", action="store_true",
                     help="gate only the fig2 artifact")
+    ap.add_argument("--fig5", action="store_true",
+                    help="also gate the fig5 failure-scenario smoke "
+                         "(error + priced cost per scenario vs the "
+                         "committed fig5_smoke artifact)")
+    ap.add_argument("--fig5-only", action="store_true",
+                    help="gate ONLY the fig5 failure-scenario smoke")
     ap.add_argument("--large-n", action="store_true",
                     help="also gate the large-n smoke (n=20k FI run; "
                          "slower, run under REPRO_BENCH_SMOKE=1)")
@@ -191,6 +274,21 @@ def main() -> int:
                   "--smoke")
             return 1
         print(f"check_artifacts: OK — large-n smoke within "
+              f"±{args.tolerance:.0%} of the committed artifact")
+        return 0
+
+    if args.fig5_only:
+        failures = check_fig5(args.tolerance)
+        if failures:
+            print("check_artifacts: FAIL — fig5 scenario smoke drifted from "
+                  "the committed artifact:")
+            print("\n".join(failures))
+            print("If the drift is intentional (algorithm change), "
+                  "regenerate and commit: python -m benchmarks.fig5_failures"
+                  " --n 300 --trials 2 --scenario-trials 2 --ps 0.7,1.0 "
+                  f"--artifact {FIG5}")
+            return 1
+        print(f"check_artifacts: OK — fig5 scenario smoke within "
               f"±{args.tolerance:.0%} of the committed artifact")
         return 0
 
@@ -234,6 +332,8 @@ def main() -> int:
 
     if not args.skip_fig3:
         failures += check_fig3(args.tolerance)
+    if args.fig5:
+        failures += check_fig5(args.tolerance)
     if args.large_n:
         failures += check_large_n(args.tolerance)
 
@@ -246,6 +346,8 @@ def main() -> int:
               "fig2 and REPRO_BENCH_SMOKE=1 tools/ci.sh for the fig3 smokes")
         return 1
     gated = "fig2" if args.skip_fig3 else "fig2 + fig3 smoke"
+    if args.fig5:
+        gated += " + fig5 scenario smoke"
     print(f"check_artifacts: OK — {gated} message counts within "
           f"±{args.tolerance:.0%} of the committed artifacts")
     return 0

@@ -3,10 +3,12 @@
 # artifact-regression check.
 #
 #   tools/ci.sh                     # tier-1 (-m "not slow") + fig2/fig3
-#                                   #   smokes through
+#                                   #   smokes + fig5 scenario-matrix
+#                                   #   smoke through
 #                                   #   tools/check_artifacts.py (±15%
-#                                   #   message-count gate vs the
-#                                   #   committed artifacts)
+#                                   #   message-count / error / priced-
+#                                   #   cost gate vs the committed
+#                                   #   artifacts)
 #   tools/ci.sh --no-bench          # tests only
 #   tools/ci.sh --bench-only        # gate + smokes only (CI job 2: the
 #                                   #   tier1 job already ran the tests)
@@ -51,8 +53,12 @@ if [[ "${1:-}" != "--bench-only" ]]; then
 fi
 
 if [[ "${1:-}" != "--no-bench" ]]; then
-    echo "== benchmark smoke + artifact-regression gate (fig2 + fig3) =="
-    python tools/check_artifacts.py
+    echo "== benchmark smoke + artifact-regression gate (fig2 + fig3 + fig5 scenarios) =="
+    # --fig5: re-runs the failure-scenario matrix smoke (n=300, 5
+    # scenarios: baseline/churn/stragglers/regional/byzantine) and gates
+    # achieved error + priced medium cost ±15% vs the committed
+    # fig5_smoke artifact
+    python tools/check_artifacts.py --fig5
 fi
 
 if [[ "${REPRO_BENCH_SMOKE:-0}" == "1" ]]; then

@@ -78,14 +78,17 @@ def gossip_memory_report(
     """
     import numpy as np
 
-    from repro.core import build_plan, execute_plan, random_geometric_graph
+    from repro.core import (
+        ExecOptions, build_plan, execute_plan, random_geometric_graph,
+    )
 
     g = random_geometric_graph(n, seed=1000 + n)
     x0 = np.random.default_rng(n).normal(0, 1, n)
     plan = build_plan(g, seed=seed, method=method)
     res = execute_plan(
         plan, x0, eps=eps, seeds=tuple(seed + t for t in range(trials)),
-        weighted=True, fixed_ticks_scale=fixed_ticks_scale, backend=backend,
+        weighted=True, fixed_ticks_scale=fixed_ticks_scale,
+        options=ExecOptions(backend=backend),
     )
     report = memory_report()
     report.update(
