@@ -330,6 +330,11 @@ def execute_plan(
     if (scenario or cost is not None) and schedule != "presampled":
         raise ValueError(
             "failure scenarios / cost pricing require schedule='presampled'")
+    if scenario and fixed_ticks_scale <= 0:
+        raise ValueError(
+            "failure scenarios require fixed_ticks_scale > 0: scenario "
+            "event times are fractions of the finest level's tick budget, "
+            "which the eps-oracle mode leaves unbounded")
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     n = plan.graph.n
@@ -546,6 +551,10 @@ def execute_plan(
     cache_key = (
         T, per_trial_x0, weighted, failures, cost, backend, schedule, mesh,
         interpret, tuple(chk_levels), collect_usage,
+        # scenario event ticks are baked into the trace as constants
+        # derived from maxt_levels (see _failure_consts), so executors
+        # traced for different tick budgets must not collide
+        tuple(maxt_levels) if scenario else None,
     )
     fn = plan.exec_cache.get(cache_key)
     if fn is None:

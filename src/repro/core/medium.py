@@ -143,6 +143,22 @@ class FailureModel:
                 raise ValueError(f"{name} must be in [0, 1], got {v}")
         if not 0.0 < self.straggler_success <= 1.0:
             raise ValueError("straggler_success must be in (0, 1]")
+        # a list (natural from JSON configs) would silently break the
+        # frozen dataclass's hashability, which the compiled-executor
+        # cache key relies on — coerce and validate
+        try:
+            w = tuple(float(t) for t in self.regional_window)
+        except (TypeError, ValueError):
+            raise ValueError(
+                f"regional_window must be a (t0, t1) pair of floats, "
+                f"got {self.regional_window!r}")
+        if len(w) != 2:
+            raise ValueError(
+                f"regional_window must be a (t0, t1) pair, got {w!r}")
+        if not 0.0 <= w[0] <= w[1]:
+            raise ValueError(
+                f"regional_window needs 0 <= t0 <= t1, got {w!r}")
+        object.__setattr__(self, "regional_window", w)
 
     @property
     def has_scenario(self) -> bool:
@@ -216,13 +232,23 @@ def price_messages(
     Supersedes `core.failures.handshake_cost`: the handshake total
     ``T + NegBinomial(T, p)`` is exactly `transmissions +
     retransmissions` here.
+
+    When ``model.sample`` and retransmissions are in play
+    (``retransmit_p < 1``), `rng` is required: a hidden fixed-seed
+    default would make every no-rng call draw identical NegBinomial
+    variates, so repeated "sampled" pricings of different runs would
+    be silently correlated.
     """
     msgs = np.atleast_1d(np.asarray(messages, np.int64))
     p = model.retransmit_p
     if p >= 1.0:
         retx = np.zeros(msgs.shape, np.float64)
     elif model.sample:
-        rng = rng or np.random.default_rng(0)
+        if rng is None:
+            raise ValueError(
+                "price_messages needs an explicit rng when model.sample "
+                "and retransmit_p < 1 (pass sample=False for the "
+                "closed-form mean instead)")
         retx = np.array(
             [float(rng.negative_binomial(int(m), p)) if m > 0 else 0.0
              for m in msgs])

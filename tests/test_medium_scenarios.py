@@ -249,6 +249,62 @@ def test_scenario_matrix_smoke(setup):
         run_scenario_matrix(g, x0, fixed_ticks_scale=0.0, plan=plan)
 
 
+def test_scenario_executor_cache_keys_on_tick_budget(setup):
+    """Scenario event ticks are baked into the trace as constants
+    derived from maxt_levels, so a plan whose executor cache was primed
+    at one fixed_ticks_scale must retrace — not silently reuse stale
+    event times — when replayed at another budget (regression: the
+    cache key used to omit maxt_levels)."""
+    g, plan, x0 = setup
+    fm = FailureModel(churn_fraction=0.25, churn_time=0.25)
+    # fresh plan: the ground truth for the full-budget scenario run
+    fresh = build_plan(g, k=2, seed=0)
+    want = _run(fresh, x0, fixed_ticks_scale=1.0, failures=fm)
+    # primed plan: a quarter-budget run populates the executor cache
+    # with event ticks scaled to ITS maxt_levels first
+    _run(plan, x0, fixed_ticks_scale=0.25, failures=fm)
+    got = _run(plan, x0, fixed_ticks_scale=1.0, failures=fm)
+    assert np.array_equal(want.x_final, got.x_final)
+    assert np.array_equal(want.messages, got.messages)
+
+
+def test_scenarios_reject_eps_oracle_mode(setup):
+    """execute_plan itself (not just run_scenario_matrix) rejects
+    scenario FailureModels in eps-oracle mode, where event times become
+    fractions of the unbounded max_ticks_per_level cap and the scenario
+    silently degenerates to the reliable run."""
+    g, plan, x0 = setup
+    with pytest.raises(ValueError, match="fixed_ticks_scale"):
+        _run(plan, x0, fixed_ticks_scale=0.0,
+             failures=FailureModel(churn_fraction=0.1))
+    # loss_p alone is the legacy trajectory-level model, not a scenario:
+    # it stays valid in eps-oracle mode
+    _run(plan, x0, fixed_ticks_scale=0.0, eps=1e-2,
+         failures=FailureModel(loss_p=0.9))
+
+
+def test_price_messages_requires_rng_when_sampling():
+    with pytest.raises(ValueError, match="rng"):
+        price_messages(100, CostModel(retransmit_p=0.5))
+    # no draws happen at p=1 or with sample=False: rng stays optional
+    assert price_messages(
+        100, CostModel(retransmit_p=1.0)).retransmissions[0] == 0.0
+    price_messages(100, CostModel(retransmit_p=0.5, sample=False))
+
+
+def test_regional_window_coerced_and_validated():
+    # lists (natural from JSON configs) coerce to a hashable tuple
+    fm = FailureModel(regional_radius=0.2, regional_window=[0.25, 0.75])
+    assert fm.regional_window == (0.25, 0.75)
+    hash(fm)
+    with pytest.raises(ValueError, match="regional_window"):
+        FailureModel(regional_window=(0.75, 0.25))
+    with pytest.raises(ValueError, match="regional_window"):
+        FailureModel(regional_window=(-0.1, 0.5))
+    with pytest.raises(ValueError, match="regional_window"):
+        FailureModel(regional_window=(0.25,))
+
+
 def test_dataclass_validation():
     with pytest.raises(ValueError):
         CostModel(retransmit_p=0.0)
