@@ -67,8 +67,9 @@ def run(wallclock: bool = False) -> list[str]:
     from jax.sharding import NamedSharding, PartitionSpec as P
 
     from repro.dist import (
-        CompressionConfig, SyncConfig, build_sync_plan, execute_sync,
-        execute_sync_sharded, plan_wire_bytes, suggest_levels, wire_fraction,
+        CompressionConfig, SyncConfig, SyncFailureModel, build_sync_plan,
+        execute_sync, execute_sync_sharded, plan_wire_bytes, suggest_levels,
+        wire_fraction,
     )
     from repro.launch.hlo_analysis import collective_bytes, device_pod_map
     from repro.launch.mesh import set_mesh
@@ -105,6 +106,21 @@ def run(wallclock: bool = False) -> list[str]:
                                       compression=int8),
         "multiscale_rotated": SyncConfig("multiscale", levels=levels,
                                          rotation_period=4),
+        # fault-tolerant variants (dist.failures / dist.robust): the same
+        # lowering pipeline with failure injection + robust aggregation
+        # fused into the executor — their extra collectives (mask
+        # broadcasts, the trimmed-mean all-gather) are the measured cost
+        # of the defense
+        "multiscale_churn_survivor": SyncConfig(
+            "multiscale", levels=levels, aggregation="survivor_weighted",
+            failures=SyncFailureModel(churn_fraction=0.25, seed=0)),
+        "multiscale_topk_churn": SyncConfig(
+            "multiscale", levels=levels, compression=topk,
+            failures=SyncFailureModel(churn_fraction=0.25, seed=0)),
+        "allreduce_trimmed_byzantine": SyncConfig(
+            "allreduce", aggregation="trimmed_mean",
+            failures=SyncFailureModel(byzantine_fraction=0.125,
+                                      byzantine_scale=10.0, seed=0)),
     }
     # serialized-vs-overlapped timing subset (see module docstring)
     OVERLAP_TIMED = {
@@ -174,7 +190,7 @@ def run(wallclock: bool = False) -> list[str]:
         stats = collective_bytes(compiled.as_text(), pod_size=16, pod_of=pod_of)
         frac = wire_fraction(cfg_s.compression)
         key = (cfg_s.strategy, plan.levels, plan.rounds, plan.exact_fusion)
-        if not compressed and not plan.rotated:
+        if not compressed and not plan.rotated and not plan.faulty:
             base_bytes.setdefault(key, stats.total_bytes)
         # variants must follow their dense base in `strategies`: falling back
         # to the variant's own lowering would count compression-compute
@@ -190,6 +206,12 @@ def run(wallclock: bool = False) -> list[str]:
         rows[name]["modeled_wire_bytes"] = plan_wire_bytes(plan, grads_abs)
         rows[name]["compression"] = cfg_s.compression.scheme
         rows[name]["rotation_period"] = cfg_s.rotation_period
+        rows[name]["aggregation"] = cfg_s.aggregation
+        fm = cfg_s.failures
+        rows[name]["failures"] = (
+            "none" if fm is None else
+            f"churn={fm.churn_fraction:g},straggler="
+            f"{fm.straggler_fraction:g},byzantine={fm.byzantine_fraction:g}")
         lines.append(csv_line(
             f"sync/{name}", 0.0,
             f"coll_bytes={stats.total_bytes} "
@@ -197,7 +219,9 @@ def run(wallclock: bool = False) -> list[str]:
             f"ops={stats.count} "
             f"xpod_frac={stats.cross_pod_bytes/max(stats.total_bytes,1):.2f} "
             f"wire_bytes={rows[name]['wire_bytes']:.0f} "
-            f"wire_frac={frac:.3f}",
+            f"wire_frac={frac:.3f} "
+            f"agg={cfg_s.aggregation} "
+            f"failures={rows[name]['failures']}",
         ))
         if wallclock and can_time:
             args = (grads, jnp.int32(0))

@@ -26,7 +26,10 @@ from .medium import (
     FailureModel,
     MediumCost,
     expected_retransmissions,
+    level_edge_messages,
+    price_edge_messages,
     price_messages,
+    route_edge_transmissions,
 )
 from .metrics import relative_error, theorem2_bound
 from .multiscale import (
@@ -122,7 +125,10 @@ __all__ = [
     "path_averaging",
     "plan_key",
     "PLAN_CACHE_VERSION",
+    "level_edge_messages",
+    "price_edge_messages",
     "price_messages",
+    "route_edge_transmissions",
     "random_geometric_graph",
     "relative_error",
     "RGG_METHODS",

@@ -54,7 +54,7 @@ from .medium import (
     expected_retransmissions,
     failure_sets,
 )
-from .options import UNSET, ExecOptions, resolve_exec_args
+from .options import ExecOptions
 from .plan import HierarchyPlan
 from .schedule import CsrGraphs
 
@@ -267,15 +267,6 @@ def execute_plan(
     options: Optional[ExecOptions] = None,
     failures: Optional[FailureModel] = None,
     cost: Optional[CostModel] = None,
-    # -- deprecated flat kwargs (one-PR shim; see core.options) ----------
-    loss_p=UNSET,
-    max_ticks_per_level=UNSET,
-    check_every=UNSET,
-    backend=UNSET,
-    schedule=UNSET,
-    mesh=UNSET,
-    interpret=UNSET,
-    collect_usage=UNSET,
 ) -> EngineResult:
     """Execute `plan` for T = len(seeds) independent trials in one
     compiled, vmapped call.
@@ -285,9 +276,9 @@ def execute_plan(
     election, routes) is shared, so trials differ only in gossip noise.
 
     `options` (an `ExecOptions`) selects backend / schedule / mesh /
-    check cadence / tick budget; the historical flat kwargs are
-    accepted for one deprecation window and produce bitwise-identical
-    results.  `failures` (a `FailureModel`) carries the paper's
+    check cadence / tick budget (the historical flat kwargs were
+    removed after their deprecation window — a stale call now raises
+    `TypeError`).  `failures` (a `FailureModel`) carries the paper's
     `loss_p` message-loss model plus the scenario fields (churn,
     stragglers, regional outage, Byzantine drops) that perturb the
     presampled schedule — scenario event times are fractions of the
@@ -313,16 +304,21 @@ def execute_plan(
     exchange counters (for attribution audits); leave it off on the hot
     path.
     """
-    options, failures = resolve_exec_args(
-        options, failures,
-        dict(loss_p=loss_p, max_ticks_per_level=max_ticks_per_level,
-             check_every=check_every, backend=backend, schedule=schedule,
-             mesh=mesh, interpret=interpret, collect_usage=collect_usage),
-    )
+    options = options if options is not None else ExecOptions()
     backend, schedule, mesh = options.backend, options.schedule, options.mesh
     interpret, collect_usage = options.interpret, options.collect_usage
     check_every = options.check_every
     max_ticks_per_level = options.max_ticks_per_level
+    if failures is not None and failures.heterogeneous:
+        raise ValueError(
+            "per-edge loss_p is closed-form pricing only — the trajectory "
+            "engine needs a scalar; price heterogeneous links with "
+            "level_edge_messages + price_edge_messages")
+    if cost is not None and cost.heterogeneous:
+        raise ValueError(
+            "per-edge hop_energy is closed-form pricing only — price "
+            "heterogeneous links with level_edge_messages + "
+            "price_edge_messages")
     loss_p = failures.loss_p if failures is not None else None
     scenario = failures is not None and failures.has_scenario
     if backend not in GOSSIP_BACKENDS:

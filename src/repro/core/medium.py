@@ -50,6 +50,9 @@ __all__ = [
     "expected_retransmissions",
     "price_messages",
     "failure_sets",
+    "route_edge_transmissions",
+    "level_edge_messages",
+    "price_edge_messages",
 ]
 
 # RNG stream tags for cost/perturbation draws: folded into the level key
@@ -64,7 +67,12 @@ _TAG_STRAGGLER = 2_147_483_641
 class CostModel:
     """Wireless transmission pricing (static, hashable).
 
-    hop_energy: energy units per physical single-hop transmission.
+    hop_energy: energy units per physical single-hop transmission — a
+        scalar, or a per-overlay-edge tuple keyed off one level's
+        route-incidence CSR (heterogeneous links: long hops cost more).
+        Per-edge models are priced closed-form only, through
+        `level_edge_messages` + `price_edge_messages`; the schedule
+        reduction and `price_messages` reject them.
     retransmit_p: per-attempt link-level delivery probability; each
         logical single-hop transmission physically takes Geometric(p)
         attempts (ACK/retransmit until delivery, the handshake model of
@@ -79,7 +87,7 @@ class CostModel:
         False prices them with the closed-form mean ``T * (1-p)/p``.
     """
 
-    hop_energy: float = 1.0
+    hop_energy: object = 1.0  # float | per-edge tuple[float, ...]
     retransmit_p: float = 1.0
     congestion_alpha: float = 0.0
     sample: bool = True
@@ -88,8 +96,29 @@ class CostModel:
         if not 0.0 < self.retransmit_p <= 1.0:
             raise ValueError(
                 f"retransmit_p must be in (0, 1], got {self.retransmit_p}")
-        if self.hop_energy < 0 or self.congestion_alpha < 0:
+        he = self.hop_energy
+        if not isinstance(he, (int, float)):
+            # a list/ndarray (natural from configs) would silently break
+            # hashability — coerce to a tuple, like regional_window
+            try:
+                he = tuple(float(v) for v in he)
+            except (TypeError, ValueError):
+                raise ValueError(
+                    f"hop_energy must be a float or a per-edge sequence "
+                    f"of floats, got {self.hop_energy!r}")
+            object.__setattr__(self, "hop_energy", he)
+            if any(v < 0 for v in he):
+                raise ValueError("hop_energy / congestion_alpha must be >= 0")
+        elif he < 0:
             raise ValueError("hop_energy / congestion_alpha must be >= 0")
+        if self.congestion_alpha < 0:
+            raise ValueError("hop_energy / congestion_alpha must be >= 0")
+
+    @property
+    def heterogeneous(self) -> bool:
+        """True when hop_energy is a per-edge map (closed-form pricing
+        through `price_edge_messages` only)."""
+        return isinstance(self.hop_energy, tuple)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -99,7 +128,11 @@ class FailureModel:
     loss_p: per-hop message delivery probability (paper §VI-C-2; a lost
         request aborts the exchange, a lost reply leaves only the
         contacted node updated).  None = reliable.  Bitwise-identical
-        to the legacy ``loss_p=`` kwarg.
+        to the legacy ``loss_p=`` kwarg.  May also be a per-overlay-edge
+        tuple keyed off one level's route-incidence CSR (heterogeneous
+        links) — per-edge models price closed-form only, through
+        `level_edge_messages` + `price_edge_messages`; the trajectory
+        engine rejects them.
     churn_fraction / churn_time: `churn_fraction` of the nodes leave
         the network at `churn_time` (fraction of the finest level's
         tick budget) and stay down for the rest of the run — their
@@ -124,7 +157,7 @@ class FailureModel:
         independent of the gossip seed.
     """
 
-    loss_p: Optional[float] = None
+    loss_p: object = None  # None | float | per-edge tuple[float, ...]
     churn_fraction: float = 0.0
     churn_time: float = 0.5
     straggler_fraction: float = 0.0
@@ -135,8 +168,22 @@ class FailureModel:
     seed: int = 0
 
     def __post_init__(self):
-        if self.loss_p is not None and not 0.0 < self.loss_p <= 1.0:
-            raise ValueError(f"loss_p must be in (0, 1], got {self.loss_p}")
+        lp = self.loss_p
+        if lp is not None and not isinstance(lp, (int, float)):
+            # per-edge map: coerce to a tuple (hashability, as with
+            # regional_window) and validate every entry
+            try:
+                lp = tuple(float(v) for v in lp)
+            except (TypeError, ValueError):
+                raise ValueError(
+                    f"loss_p must be None, a float, or a per-edge "
+                    f"sequence of floats, got {self.loss_p!r}")
+            object.__setattr__(self, "loss_p", lp)
+            for v in lp:
+                if not 0.0 < v <= 1.0:
+                    raise ValueError(f"loss_p must be in (0, 1], got {v}")
+        elif lp is not None and not 0.0 < lp <= 1.0:
+            raise ValueError(f"loss_p must be in (0, 1], got {lp}")
         for name in ("churn_fraction", "straggler_fraction", "drop_fraction"):
             v = getattr(self, name)
             if not 0.0 <= v <= 1.0:
@@ -159,6 +206,12 @@ class FailureModel:
             raise ValueError(
                 f"regional_window needs 0 <= t0 <= t1, got {w!r}")
         object.__setattr__(self, "regional_window", w)
+
+    @property
+    def heterogeneous(self) -> bool:
+        """True when loss_p is a per-edge map (closed-form pricing
+        through `price_edge_messages` only)."""
+        return isinstance(self.loss_p, tuple)
 
     @property
     def has_scenario(self) -> bool:
@@ -239,6 +292,10 @@ def price_messages(
     variates, so repeated "sampled" pricings of different runs would
     be silently correlated.
     """
+    if model.heterogeneous:
+        raise ValueError(
+            "per-edge hop_energy has no meaning for a bare message count "
+            "— use level_edge_messages + price_edge_messages")
     msgs = np.atleast_1d(np.asarray(messages, np.int64))
     p = model.retransmit_p
     if p >= 1.0:
@@ -260,6 +317,102 @@ def price_messages(
         transmissions=msgs.astype(np.float64), retransmissions=retx,
         congestion=cong, energy=energy,
         level_energy=energy[:, None], model=model,
+    )
+
+
+def route_edge_transmissions(lp) -> np.ndarray:
+    """Per-overlay-edge single-hop transmissions of ONE request+reply
+    exchange over that edge: the sum of the level's route-incidence
+    counts attributed to the edge (path endpoints transmit once,
+    interior relays twice — i.e. ``2 * route_hops``).
+
+    `lp` is a level plan carrying the overlay attribution arrays
+    (`edge_pos_i` / `inc_edge` / `inc_count`); levels without routed
+    overlay exchanges (finest level, cell-local gossip) are rejected.
+    """
+    if lp.edge_pos_i is None or lp.inc_edge is None:
+        raise ValueError(
+            "level has no overlay route-incidence attribution "
+            "(per-edge pricing applies to routed overlay levels only)")
+    tx = np.zeros(len(np.asarray(lp.edge_pos_i)), np.int64)
+    np.add.at(tx, np.asarray(lp.inc_edge, np.int64),
+              np.asarray(lp.inc_count, np.int64))
+    return tx
+
+
+def level_edge_messages(lp, usage) -> np.ndarray:
+    """Per-overlay-edge logical single-hop transmissions of one level
+    run: the edge's exchange count — its two directed usage counters,
+    gathered from the flat `usage` buffer exactly as `overlay_node_sends`
+    does — times its per-exchange route transmissions.  `usage` may be
+    ``(U,)`` or carry leading trial axes (``(T, U)``); the edge axis is
+    appended last.
+    """
+    tx = route_edge_transmissions(lp)
+    usage = np.asarray(usage, np.int64)
+    use_e = usage[..., lp.edge_pos_i] + usage[..., lp.edge_pos_j]
+    return use_e * tx
+
+
+def price_edge_messages(
+    edge_messages,
+    model: CostModel,
+    failures: Optional[FailureModel] = None,
+) -> MediumCost:
+    """Closed-form pricing of per-edge logical transmission counts under
+    heterogeneous links: `model.hop_energy` and `failures.loss_p` may
+    each be a per-edge tuple (or a scalar, broadcast over edges).
+
+    The per-attempt delivery probability of edge e is
+    ``p_e = retransmit_p * loss_p_e`` (link-level ACK loss compounds
+    with medium loss); expected extra attempts are the Geometric mean
+    ``m_e * (1 - p_e) / p_e`` and energy is
+    ``hop_energy_e * (m_e + retx_e)``.  Closed-form ONLY: per-edge
+    sampling has no schedule to draw against, so a sampling model
+    (``model.sample`` with an effective ``p_e < 1``) is rejected —
+    construct the model with ``sample=False``.
+
+    `edge_messages` is ``(E,)`` or ``(T, E)`` (from
+    `level_edge_messages`); returns a `MediumCost` whose per-trial
+    totals sum over edges and whose `level_energy` is the per-edge
+    energy breakdown ``(T, E)``.  Congestion is 0 (no concurrency
+    information in per-edge counts).
+    """
+    msgs = np.asarray(edge_messages, np.float64)
+    if msgs.ndim == 1:
+        msgs = msgs[None, :]
+    elif msgs.ndim != 2:
+        raise ValueError(
+            f"edge_messages must be (E,) or (T, E), got shape {msgs.shape}")
+    E = msgs.shape[1]
+
+    def per_edge(v, name):
+        if isinstance(v, tuple):
+            if len(v) != E:
+                raise ValueError(
+                    f"{name} has {len(v)} entries but edge_messages has "
+                    f"{E} edges")
+            return np.asarray(v, np.float64)
+        return np.full(E, float(v), np.float64)
+
+    hop_e = per_edge(model.hop_energy, "hop_energy")
+    loss = failures.loss_p if failures is not None else None
+    loss_e = per_edge(loss if loss is not None else 1.0, "loss_p")
+    p_e = model.retransmit_p * loss_e
+    if model.sample and np.any(p_e < 1.0):
+        raise ValueError(
+            "per-edge pricing is closed-form only — pass "
+            "CostModel(sample=False) (there is no schedule to sample "
+            "per-edge retransmissions against)")
+    retx_e = msgs * (1.0 - p_e) / p_e
+    edge_energy = hop_e * (msgs + retx_e)
+    return MediumCost(
+        transmissions=msgs.sum(axis=1),
+        retransmissions=retx_e.sum(axis=1),
+        congestion=np.zeros(msgs.shape[0], np.float64),
+        energy=edge_energy.sum(axis=1),
+        level_energy=edge_energy,
+        model=model,
     )
 
 

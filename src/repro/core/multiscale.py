@@ -46,7 +46,7 @@ import numpy as np
 
 from .engine import EngineResult, execute_plan, trials_error
 from .medium import CostModel, FailureModel, MediumCost
-from .options import UNSET, ExecOptions, resolve_exec_args
+from .options import ExecOptions
 from .partition import Partition
 from .plan import HierarchyPlan, build_plan
 from .rgg import Graph
@@ -151,12 +151,6 @@ def multiscale_gossip(
     options: Optional[ExecOptions] = None,
     failures: Optional[FailureModel] = None,
     cost: Optional[CostModel] = None,
-    # -- deprecated flat kwargs (one-PR shim; see core.options) ----------
-    loss_p=UNSET,
-    max_ticks_per_level=UNSET,
-    backend=UNSET,
-    schedule=UNSET,
-    mesh=UNSET,
 ) -> Union[MultiscaleResult, MultiscaleTrials]:
     """Run multiscale gossip (Alg. 1); see module docstring.
 
@@ -171,15 +165,12 @@ def multiscale_gossip(
     paper's loss model plus churn / straggler / regional / Byzantine
     scenarios; `cost` (`CostModel`) prices the run onto the wireless
     medium into `.cost` without perturbing the exchange trajectory.
-    The historical flat kwargs (``backend=``, ``schedule=``, ``mesh=``,
-    ``loss_p=``, ``max_ticks_per_level=``) remain accepted for one
-    deprecation window and produce bitwise-identical results.
+    The historical flat kwargs (``backend=``, ``loss_p=``, ...) were
+    removed after their deprecation window — a stale call now raises
+    `TypeError`.
     """
-    options, failures = resolve_exec_args(
-        options, failures,
-        dict(loss_p=loss_p, max_ticks_per_level=max_ticks_per_level,
-             backend=backend, schedule=schedule, mesh=mesh),
-    )
+    if options is None:
+        options = ExecOptions()
     if plan is None:
         plan = build_plan(
             g, k=k, a=a, cell_max=cell_max, seed=seed, rep_mode=rep_mode

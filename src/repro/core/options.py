@@ -9,25 +9,17 @@ sibling dataclasses `FailureModel` / `CostModel` (`core.medium`).
 
 The historical flat kwargs (``backend=``, ``schedule=``, ``mesh=``,
 ``interpret=``, ``check_every=``, ``max_ticks_per_level=``,
-``collect_usage=``, ``loss_p=``) remain accepted by `execute_plan` /
-`multiscale_gossip` for one deprecation window: they raise a
-`DeprecationWarning` and are folded into `ExecOptions` /
-`FailureModel`, producing bitwise-identical results to the new call
-form (asserted by tests/test_medium_scenarios.py).
+``collect_usage=``, ``loss_p=``) have been REMOVED after their
+one-release deprecation window: `execute_plan` / `multiscale_gossip`
+now take `options=ExecOptions(...)` and `failures=FailureModel(...)`
+only, and a stale flat-kwarg call fails loudly with `TypeError`.
 """
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from typing import Any, Optional
 
-from .medium import FailureModel
-
-__all__ = ["ExecOptions", "UNSET", "resolve_exec_args"]
-
-# distinguishes "kwarg not passed" from an explicit None (loss_p=None
-# and interpret=None are meaningful values)
-UNSET: Any = type("_Unset", (), {"__repr__": lambda s: "UNSET"})()
+__all__ = ["ExecOptions"]
 
 _ENGINE_BACKENDS = ("lax", "pallas", "matmul")
 _SCHEDULES = ("presampled", "per_tick")
@@ -71,43 +63,3 @@ class ExecOptions:
                 f"expected one of {_SCHEDULES}")
         if self.check_every < 1:
             raise ValueError("check_every must be >= 1")
-
-
-def resolve_exec_args(
-    options: Optional[ExecOptions],
-    failures: Optional[FailureModel],
-    legacy: dict,
-    *,
-    stacklevel: int = 3,
-) -> tuple[ExecOptions, Optional[FailureModel]]:
-    """Fold deprecated flat kwargs into (ExecOptions, FailureModel).
-
-    `legacy` maps kwarg name -> value, with UNSET marking "not passed".
-    Passing a legacy kwarg warns; passing one alongside an explicit
-    `options=` / `failures=` object is ambiguous and raises.
-    """
-    given = {k: v for k, v in legacy.items() if v is not UNSET}
-    if given:
-        warnings.warn(
-            f"the flat kwargs {sorted(given)} are deprecated; pass "
-            "options=ExecOptions(...) and failures=FailureModel(...) "
-            "instead (repro.core.options / repro.core.medium)",
-            DeprecationWarning, stacklevel=stacklevel,
-        )
-    loss_p = given.pop("loss_p", UNSET)
-    if given:
-        if options is not None:
-            raise ValueError(
-                f"both options=ExecOptions(...) and the deprecated kwargs "
-                f"{sorted(given)} were passed; use one call form")
-        options = ExecOptions(**given)
-    elif options is None:
-        options = ExecOptions()
-    if loss_p is not UNSET:
-        if failures is not None:
-            raise ValueError(
-                "both failures=FailureModel(...) and the deprecated "
-                "loss_p= kwarg were passed; use one call form")
-        if loss_p is not None:
-            failures = FailureModel(loss_p=float(loss_p))
-    return options, failures

@@ -10,15 +10,24 @@ Public surface:
   suggest_levels                the n^(2/3) recursive-partition rule
   rotation_schedule             step-indexed randomized-cell permutations
   compression                   error-feedback gradient compression
+  SyncFailureModel              per-step churn/straggler/Byzantine injection
+  AGGREGATIONS / robust         fault-tolerant aggregation modes
 """
 from .async_sync import async_execute_sync, execute_sync_sharded, init_inflight
 from .compression import (
     CompressionConfig, compress, decompress, init_residual, wire_fraction,
 )
+from .failures import (
+    ReplicaFaults, SyncFailureModel, fault_counts, replica_fault_masks,
+)
 from .gossip_sync import STRATEGIES, SyncConfig, sync_gradients
 from .plan import (
-    OVERLAP_MODES, SyncPlan, build_sync_plan, plan_wire_bytes,
+    AGGREGATIONS, OVERLAP_MODES, SyncPlan, build_sync_plan, plan_wire_bytes,
     tree_payload_bytes,
+)
+from .robust import (
+    masked_coordinate_median, masked_trimmed_mean, resolve_trim,
+    survivor_weighted_fn, tree_robust_reduce,
 )
 from .gossip_sync import execute_sync
 from .topology import (
@@ -27,9 +36,19 @@ from .topology import (
 )
 
 __all__ = [
+    "AGGREGATIONS",
     "OVERLAP_MODES",
+    "ReplicaFaults",
     "SyncConfig",
+    "SyncFailureModel",
     "SyncPlan",
+    "fault_counts",
+    "masked_coordinate_median",
+    "masked_trimmed_mean",
+    "replica_fault_masks",
+    "resolve_trim",
+    "survivor_weighted_fn",
+    "tree_robust_reduce",
     "async_execute_sync",
     "build_sync_plan",
     "execute_sync",

@@ -53,8 +53,15 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
 from .compression import compress, decompress, init_residual
+from .failures import apply_payload_faults, replica_fault_masks
 from .gossip_sync import execute_sync
 from .plan import SyncPlan
+from .robust import (
+    masked_coordinate_median,
+    masked_trimmed_mean,
+    resolve_trim,
+    survivor_weighted_fn,
+)
 
 __all__ = [
     "async_execute_sync",
@@ -267,6 +274,81 @@ def execute_sync_sharded(
     if compressed and residuals is None:
         residuals = init_residual(grads)
 
+    faulty = plan.faulty
+    robust = plan.robust_consensus
+    if robust:
+        k_drop, k_trim = resolve_trim(plan.failures, plan.R)
+    shape = tuple(inner.shape[n] for n in names)
+
+    def _program_rid():
+        # dense replica index of this program: the replica axis was
+        # reshaped over `shape` row-major, so rid is the row-major
+        # linearization of the program's mesh coordinates
+        rid = jnp.int32(0)
+        stride = 1
+        for name, L in zip(reversed(names), reversed(shape)):
+            rid = rid + lax.axis_index(name) * stride
+            stride *= L
+        return rid
+
+    def _mix_body(payload, g, r, new_r, s):
+        """Shared fault-injection + aggregation tail of both bodies.
+
+        The fault masks are recomputed identically on every program
+        (all inputs replicated, same (seed, step) fold as the dense
+        executor), then indexed at this program's replica id — so the
+        injected faults match the dense path bitwise for the same seed.
+        """
+        if faulty:
+            faults = replica_fault_masks(plan.failures, plan.R, s)
+            rid = _program_rid()
+            dropped_i = faults.dropped[rid]
+            byz_i = faults.byzantine[rid]
+            live_i = faults.live[rid]
+            if compressed:
+                payload, new_r = apply_payload_faults(
+                    payload, new_r, g, r, dropped_i, byz_i,
+                    plan.failures.byzantine_scale,
+                )
+            else:
+                payload, _ = apply_payload_faults(
+                    payload, None, None, None, dropped_i, byz_i,
+                    plan.failures.byzantine_scale,
+                )
+
+        if robust:
+            dropped_full = (
+                faults.dropped if faulty else jnp.zeros((plan.R,), bool)
+            )
+
+            def robust_fn(x):
+                # gather the whole replica axis (names-order row-major
+                # matches the dense replica ordering), reduce once —
+                # the aggregate is a consensus value, identical on
+                # every program
+                full = lax.all_gather(x, names, axis=0, tiled=True)
+                if plan.aggregation == "trimmed_mean":
+                    agg = masked_trimmed_mean(
+                        full, dropped_full, k_drop, k_trim
+                    )
+                else:
+                    agg = masked_coordinate_median(full, dropped_full, k_drop)
+                if faulty:
+                    agg = jnp.where(dropped_i, jnp.zeros_like(agg), agg)
+                return agg
+
+            return jax.tree.map(robust_fn, payload), new_r
+
+        fn = _shard_rotate(mix, plan, names, s) if plan.rotated else mix
+        if faulty and plan.aggregation == "survivor_weighted":
+            fn = survivor_weighted_fn(fn, live_i)
+        out = jax.tree.map(fn, payload)
+        if faulty:
+            out = jax.tree.map(
+                lambda m: jnp.where(live_i, m, jnp.zeros_like(m)), out
+            )
+        return out, new_r
+
     spec = P(names)      # leading replica axis over every level axis
     sspec = P()          # step index is replicated
 
@@ -274,8 +356,7 @@ def execute_sync_sharded(
         def body(g, r, s):
             payload, new_r = compress(g, r, plan.compression)
             payload = decompress(payload, plan.compression)
-            fn = _shard_rotate(mix, plan, names, s) if plan.rotated else mix
-            return jax.tree.map(fn, payload), new_r
+            return _mix_body(payload, g, r, new_r, s)
 
         return shard_map(
             body, mesh=inner, in_specs=(spec, spec, sspec),
@@ -283,8 +364,8 @@ def execute_sync_sharded(
         )(grads, residuals, jnp.asarray(step, jnp.int32))
 
     def body(g, s):
-        fn = _shard_rotate(mix, plan, names, s) if plan.rotated else mix
-        return jax.tree.map(fn, g)
+        mixed, _ = _mix_body(g, g, None, None, s)
+        return mixed
 
     mixed = shard_map(
         body, mesh=inner, in_specs=(spec, sspec), out_specs=spec,

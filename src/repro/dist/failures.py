@@ -1,0 +1,198 @@
+"""Replica-failure injection for decentralized gradient sync.
+
+The training-stack twin of `core.medium.FailureModel`: the paper prices
+multiscale gossip on an unreliable wireless medium where packets drop
+mid-exchange; in decentralized training the analogous event is a
+*replica* that disappears mid-sync — preempted, partitioned, or slow
+enough to miss the round — or one that ships a corrupted gradient.
+`SyncFailureModel` is the static, hashable description of that surface;
+it rides `SyncConfig` → `SyncPlan` like every other sync knob, so one
+compiled executor serves the whole (possibly failing) run.
+
+Per-step fault sets are drawn deterministically from ``(seed, step)``
+with **exact disjoint counts** (one permutation per step, sliced into
+churned / straggler / Byzantine ranks).  Exactness matters twice: the
+set sizes are static, which is what lets the robust aggregators in
+`dist.robust` trim with static shapes under jit, and the same
+``(seed, step)`` pair reproduces the same faults in the dense,
+overlapped, and shard_map executors (the dense-vs-sharded parity tests
+rely on it).
+
+Semantics per sync step:
+
+* **churned / straggler replicas** are absent: their payload does not
+  travel and they receive nothing (their mixed gradient is zero — the
+  step applies no update to them).  The two families act identically on
+  a single sync; they are distinguished so scenario matrices can name
+  them (churn models a replica that is *gone*, stragglers one that is
+  merely late and rejoins next step).  With error-feedback compression
+  on, a dropped replica's whole accumulator ``grads + residual`` stays
+  in its residual — bitwise, nothing is lost — and re-enters the mix
+  when it rejoins: that is the EF-residual recovery story.
+* **Byzantine replicas** stay in the round but transmit an adversarial
+  payload (sign-flipped and scaled by ``byzantine_scale``); defending
+  against it is the job of the robust aggregation modes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "ReplicaFaults",
+    "SyncFailureModel",
+    "apply_payload_faults",
+    "fault_counts",
+    "replica_fault_masks",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class SyncFailureModel:
+    """Static (hashable) per-step replica fault injection.
+
+    churn_fraction: fraction of replicas absent from each sync step
+        (gone: no payload sent, none received).
+    straggler_fraction: fraction of replicas that miss the sync round
+        (late: same per-step effect as churn, named separately for
+        scenario matrices).
+    byzantine_fraction: fraction of replicas transmitting an
+        adversarial payload (sign-flipped, scaled).
+    byzantine_scale: magnitude of the corruption; the transmitted
+        payload is ``-byzantine_scale * honest_payload``.
+    seed: fault-injection RNG seed — per-step sets are deterministic in
+        ``(seed, step)`` and independent of the gossip/rotation seeds.
+
+    The three sets are disjoint by construction and exactly sized
+    (``round(fraction * R)`` replicas each), so the counts are static
+    under jit.  `build_sync_plan` validates that at least one honest
+    replica survives.
+    """
+
+    churn_fraction: float = 0.0
+    straggler_fraction: float = 0.0
+    byzantine_fraction: float = 0.0
+    byzantine_scale: float = 10.0
+    seed: int = 0
+
+    def __post_init__(self):
+        for name in ("churn_fraction", "straggler_fraction",
+                     "byzantine_fraction"):
+            v = getattr(self, name)
+            if not 0.0 <= v < 1.0:
+                raise ValueError(f"{name} must be in [0, 1), got {v}")
+        if self.byzantine_scale < 0:
+            raise ValueError(
+                f"byzantine_scale must be >= 0, got {self.byzantine_scale}")
+
+    @property
+    def active(self) -> bool:
+        """True when any fault family injects at least a nonzero rate."""
+        return (
+            self.churn_fraction > 0
+            or self.straggler_fraction > 0
+            or self.byzantine_fraction > 0
+        )
+
+
+class ReplicaFaults(NamedTuple):
+    """Per-step (R,) boolean fault masks; `dropped` = churned|straggler,
+    `live` is its complement (Byzantine replicas are live)."""
+
+    churned: jax.Array
+    straggler: jax.Array
+    byzantine: jax.Array
+    dropped: jax.Array
+    live: jax.Array
+
+
+def fault_counts(model: SyncFailureModel, R: int) -> tuple[int, int, int]:
+    """Static (k_churn, k_straggler, k_byzantine) set sizes for R
+    replicas — `round(fraction * R)` each, matching
+    `core.medium.failure_sets`' count convention."""
+    return (
+        int(round(model.churn_fraction * R)),
+        int(round(model.straggler_fraction * R)),
+        int(round(model.byzantine_fraction * R)),
+    )
+
+
+def replica_fault_masks(
+    model: SyncFailureModel, R: int, step: Any
+) -> ReplicaFaults:
+    """Draw the step's fault sets (jittable, deterministic in
+    ``(model.seed, step)``).
+
+    One replica permutation is drawn per step; ranks ``[0, kc)`` churn,
+    ``[kc, kc+ks)`` straggle, ``[kc+ks, kc+ks+kb)`` turn Byzantine.
+    Disjoint, exactly sized, and the same arrays on every program of a
+    shard_map body (all inputs are replicated).
+    """
+    kc, ks, kb = fault_counts(model, R)
+    key = jax.random.fold_in(
+        jax.random.PRNGKey(model.seed), jnp.asarray(step, jnp.int32)
+    )
+    perm = jax.random.permutation(key, R)
+    # rank[i] = position of replica i in the permutation
+    rank = jnp.zeros(R, jnp.int32).at[perm].set(jnp.arange(R, dtype=jnp.int32))
+    churned = rank < kc
+    straggler = (rank >= kc) & (rank < kc + ks)
+    byzantine = (rank >= kc + ks) & (rank < kc + ks + kb)
+    dropped = churned | straggler
+    return ReplicaFaults(
+        churned=churned, straggler=straggler, byzantine=byzantine,
+        dropped=dropped, live=~dropped,
+    )
+
+
+def _bcast(mask: jax.Array, leaf: jax.Array) -> jax.Array:
+    """Right-pad a replica mask with singleton axes to broadcast over a
+    gradient leaf (works for the dense (R,) mask and the shard_map
+    per-program scalar alike)."""
+    return mask.reshape(mask.shape + (1,) * (leaf.ndim - mask.ndim))
+
+
+def apply_payload_faults(
+    payload: Any,
+    new_residuals: Optional[Any],
+    grads: Any,
+    residuals: Optional[Any],
+    dropped: jax.Array,
+    byzantine: jax.Array,
+    byzantine_scale: float,
+) -> tuple[Any, Optional[Any]]:
+    """Inject the step's faults into the as-transmitted payload.
+
+    Dropped replicas transmit nothing: their payload rows become zero
+    and — when error-feedback residuals are carried — their residual
+    becomes the full accumulator ``grads + residuals`` (computed
+    directly, so ``payload + residual == grads + residuals`` holds
+    BITWISE for dropped rows exactly as `dist.compression.compress`
+    guarantees it for live ones: zero payload, exact-copy residual).
+    Byzantine replicas then overwrite their (live) rows with the
+    sign-flipped scaled payload; their own residual bookkeeping is left
+    untouched — an adversary's ledger is its own problem, and the
+    conservation invariant is only ever claimed for honest replicas.
+
+    `dropped` / `byzantine` may be (R,) masks (dense executor) or
+    per-program scalars (shard_map body).
+    """
+    payload = jax.tree.map(
+        lambda p: jnp.where(_bcast(dropped, p), jnp.zeros_like(p), p), payload
+    )
+    if new_residuals is not None:
+        new_residuals = jax.tree.map(
+            lambda nr, g, r: jnp.where(_bcast(dropped, nr), g + r, nr),
+            new_residuals, grads, residuals,
+        )
+    scale = jnp.float32(byzantine_scale)
+    payload = jax.tree.map(
+        lambda p: jnp.where(
+            _bcast(byzantine, p), (-scale).astype(p.dtype) * p, p
+        ),
+        payload,
+    )
+    return payload, new_residuals

@@ -70,7 +70,9 @@ import jax.numpy as jnp
 from jax import lax
 
 from .compression import compress, decompress, init_residual
+from .failures import apply_payload_faults, replica_fault_masks
 from .plan import STRATEGIES, SyncConfig, SyncPlan, build_sync_plan
+from .robust import resolve_trim, survivor_weighted_fn, tree_robust_reduce
 
 __all__ = [
     "SyncConfig",
@@ -120,6 +122,40 @@ def execute_sync(
     else:
         payload, new_residuals = grads, residuals
 
+    # Fault injection: dropped replicas transmit nothing (with EF
+    # compression their whole accumulator stays in their residual —
+    # bitwise mass conservation), Byzantine replicas transmit corrupted
+    # payloads.  plan.failures is None (or inert) on the reliable path,
+    # which stays bitwise-identical to a plan without the field.
+    faults = None
+    if plan.faulty:
+        faults = replica_fault_masks(plan.failures, R, step)
+        if plan.compression.scheme != "none":
+            payload, new_residuals = apply_payload_faults(
+                payload, new_residuals, grads, residuals,
+                faults.dropped, faults.byzantine,
+                plan.failures.byzantine_scale,
+            )
+        else:
+            payload, _ = apply_payload_faults(
+                payload, None, None, None,
+                faults.dropped, faults.byzantine,
+                plan.failures.byzantine_scale,
+            )
+
+    if plan.robust_consensus:
+        # Consensus-style robust reduction replaces the strategy's own
+        # mixing (and is invariant to the rotation permutation).
+        k_drop, k_trim = resolve_trim(plan.failures, R)
+        dropped = (
+            faults.dropped if faults is not None
+            else jnp.zeros((R,), bool)
+        )
+        mixed = tree_robust_reduce(
+            plan.aggregation, payload, dropped, k_drop, k_trim
+        )
+        return mixed, new_residuals
+
     if plan.strategy == "allreduce":
         fn = _allreduce
     elif plan.strategy == "hierarchical":
@@ -132,7 +168,21 @@ def execute_sync(
         )
     if plan.rotated:
         fn = _rotate(fn, plan, step)
-    return jax.tree.map(fn, payload), new_residuals
+    if faults is not None and plan.aggregation == "survivor_weighted":
+        # weight-channel renormalization over live replicas, applied to
+        # the (possibly rotation-conjugated) linear mixing operator
+        fn = survivor_weighted_fn(fn, faults.live)
+    mixed = jax.tree.map(fn, payload)
+    if faults is not None:
+        live = faults.live
+        mixed = jax.tree.map(
+            lambda m: jnp.where(
+                live.reshape((R,) + (1,) * (m.ndim - 1)),
+                m, jnp.zeros_like(m),
+            ),
+            mixed,
+        )
+    return mixed, new_residuals
 
 
 def sync_gradients(grads: Any, cfg: SyncConfig, R: int) -> Any:

@@ -26,9 +26,12 @@ import dataclasses
 from typing import Any, Optional
 
 from .compression import CompressionConfig, wire_fraction
+from .failures import SyncFailureModel, fault_counts
+from .robust import AGGREGATIONS, resolve_trim
 from .topology import default_rounds, rotation_schedule, suggest_levels
 
 __all__ = [
+    "AGGREGATIONS",
     "OVERLAP_MODES",
     "SyncConfig",
     "SyncPlan",
@@ -68,6 +71,17 @@ class SyncConfig:
         step's gossip has no data dependency on the backward and can
         execute concurrently.  The train state then carries a
         double-buffered `prev_grads` pytree (see `dist.async_sync`).
+    failures: optional `SyncFailureModel` injecting per-step replica
+        churn, stragglers, and Byzantine payloads into every executor
+        (see `dist.failures`).  None (default) is the reliable path,
+        bitwise-identical to a plan without the field.
+    aggregation: how per-replica payloads are combined under (possible)
+        faults — one of `dist.robust.AGGREGATIONS`.  "mean" (default)
+        is the strategy's own mixing; "trimmed_mean" /
+        "coordinate_median" are per-coordinate robust consensus
+        reductions (Byzantine defense); "survivor_weighted" keeps the
+        strategy but renormalizes doubly-stochastic mass over live
+        replicas (churn defense).
     """
 
     strategy: str = "allreduce"
@@ -78,6 +92,8 @@ class SyncConfig:
     rotation_period: int = 0
     rotation_seed: int = 0
     overlap: str = "none"
+    failures: Optional[SyncFailureModel] = None
+    aggregation: str = "mean"
 
     def __post_init__(self):
         if self.strategy not in STRATEGIES:
@@ -116,6 +132,18 @@ class SyncConfig:
             raise ValueError(
                 f"unknown overlap mode {self.overlap!r}; expected one of "
                 f"{OVERLAP_MODES}"
+            )
+        if self.failures is not None and not isinstance(
+            self.failures, SyncFailureModel
+        ):
+            raise ValueError(
+                f"failures must be a SyncFailureModel or None, "
+                f"got {self.failures!r}"
+            )
+        if self.aggregation not in AGGREGATIONS:
+            raise ValueError(
+                f"unknown aggregation {self.aggregation!r}; expected one of "
+                f"{AGGREGATIONS}"
             )
 
     def resolved_levels(self, R: int) -> tuple[int, ...]:
@@ -167,10 +195,23 @@ class SyncPlan:
     rotation: Optional[tuple[tuple[int, ...], ...]] = None
     rotation_inv: Optional[tuple[tuple[int, ...], ...]] = None
     overlap: str = "none"
+    failures: Optional[SyncFailureModel] = None
+    aggregation: str = "mean"
 
     @property
     def rotated(self) -> bool:
         return self.rotation is not None
+
+    @property
+    def faulty(self) -> bool:
+        """True when the plan injects at least one fault per step."""
+        return self.failures is not None and self.failures.active
+
+    @property
+    def robust_consensus(self) -> bool:
+        """True for the consensus-style robust reductions that replace
+        the strategy's own mixing (rotation is a no-op for them)."""
+        return self.aggregation in ("trimmed_mean", "coordinate_median")
 
     @property
     def overlapped(self) -> bool:
@@ -238,6 +279,22 @@ def build_sync_plan(cfg: SyncConfig, R: int) -> SyncPlan:
         rotation = tuple(tuple(int(i) for i in p) for p in perms)
         rotation_inv = tuple(tuple(int(i) for i in p) for p in invs)
 
+    if cfg.failures is not None:
+        kc, ks, kb = fault_counts(cfg.failures, R)
+        if kc + ks + kb >= R:
+            raise ValueError(
+                f"failure fractions leave no honest live replica: "
+                f"churn {kc} + stragglers {ks} + byzantine {kb} >= R={R}"
+            )
+    if cfg.aggregation == "trimmed_mean":
+        k_drop, k_trim = resolve_trim(cfg.failures, R)
+        if R > 1 and R - k_drop - 2 * k_trim < 1:
+            raise ValueError(
+                f"trimmed_mean infeasible: dropping {k_drop} and trimming "
+                f"2*{k_trim} of R={R} replicas leaves no value; lower the "
+                f"failure fractions or use coordinate_median"
+            )
+
     return SyncPlan(
         strategy=cfg.strategy,
         R=R,
@@ -249,6 +306,8 @@ def build_sync_plan(cfg: SyncConfig, R: int) -> SyncPlan:
         rotation_inv=rotation_inv,
         # one replica has nothing to overlap with — resolve to serialized
         overlap=cfg.overlap if R > 1 else "none",
+        failures=cfg.failures,
+        aggregation=cfg.aggregation,
     )
 
 

@@ -1,0 +1,167 @@
+"""Robust aggregation modes for decentralized gradient sync.
+
+Plain gossip mixing averages whatever arrives; one Byzantine replica
+transmitting ``-scale * g`` can therefore drag every honest replica's
+mixed gradient arbitrarily far (the mass-distortion failure the paper's
+§VI-C scenarios model at the packet level).  This module provides the
+aggregation modes `SyncConfig.aggregation` selects from:
+
+* ``"mean"`` — today's behavior, the strategy's own mixing untouched.
+* ``"trimmed_mean"`` — per-coordinate sort over replicas, discard the
+  ``k_trim`` smallest and largest live values, average the rest.  With
+  ``k_trim >= #byzantine`` every surviving value is bracketed by honest
+  values per coordinate, which is what bounds the aggregated norm.
+* ``"coordinate_median"`` — per-coordinate median over live replicas
+  (the maximally trimmed special case).
+* ``"survivor_weighted"`` — keeps the plan's mixing strategy but runs
+  it as a weight-channel pair ``fn(w * x) / fn(w)`` with ``w = live``:
+  the doubly-stochastic mass that dropped replicas would have carried
+  is renormalized over survivors instead of diluting the average with
+  zeros (mass conservation over the survivor set — the push-sum /
+  path-averaging correction of Benezit et al. specialized to static
+  per-step masks).  All mixing strategies here are linear maps with
+  row sums 1, so with no failures ``fn(w) == 1`` exactly and the
+  division is a bitwise no-op.
+
+The trimming modes exploit that `dist.failures` injects **exactly
+counted** fault sets: the number of dropped replicas and the trim width
+are static Python ints, so the masked statistics compile to static
+slices of one sort — no dynamic shapes under jit.  Dropped rows are
+filled with ``-inf`` so the ascending sort parks them below every live
+value; slicing then starts above them.
+
+Trimmed mean and median are consensus operators (every live replica
+gets the same aggregate), so they replace the strategy's mixing
+entirely and are invariant to the rotation permutation; the executors
+skip rotation for them.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .failures import SyncFailureModel, fault_counts
+
+__all__ = [
+    "AGGREGATIONS",
+    "masked_coordinate_median",
+    "masked_trimmed_mean",
+    "resolve_trim",
+    "robust_reduce",
+    "survivor_weighted_fn",
+    "tree_robust_reduce",
+]
+
+AGGREGATIONS = ("mean", "trimmed_mean", "coordinate_median",
+                "survivor_weighted")
+
+
+def resolve_trim(
+    failures: Optional[SyncFailureModel], R: int
+) -> tuple[int, int]:
+    """Static (k_drop, k_trim) for the trimming aggregators.
+
+    k_drop is the exact number of dropped (churned + straggler)
+    replicas per step; k_trim defaults to the exact Byzantine count
+    (the smallest width that provably brackets every corrupted value),
+    or 1 when no model / no Byzantine replicas are declared but at
+    least 3 live values remain (cheap outlier insurance, matching the
+    usual trimmed-mean default).
+    """
+    if failures is None:
+        kc = ks = kb = 0
+    else:
+        kc, ks, kb = fault_counts(failures, R)
+    k_drop = kc + ks
+    live = R - k_drop
+    k_trim = kb if kb > 0 else (1 if live >= 3 else 0)
+    return k_drop, k_trim
+
+
+def _sorted_live(x: jax.Array, dropped: jax.Array) -> jax.Array:
+    """Sort replicas per coordinate with dropped rows parked at the
+    bottom (they become -inf, which sorts below any live value)."""
+    neg_inf = jnp.array(-jnp.inf, x.dtype)
+    mask = dropped.reshape((-1,) + (1,) * (x.ndim - 1))
+    return jnp.sort(jnp.where(mask, neg_inf, x), axis=0)
+
+
+def masked_trimmed_mean(
+    x: jax.Array, dropped: jax.Array, k_drop: int, k_trim: int
+) -> jax.Array:
+    """Per-coordinate mean of the live values with the k_trim smallest
+    and largest discarded; returns the (1, ...) consensus row."""
+    R = x.shape[0]
+    if R - k_drop - 2 * k_trim < 1:
+        raise ValueError(
+            f"trimmed_mean needs at least one value after dropping "
+            f"{k_drop} and trimming 2*{k_trim} of {R} replicas")
+    s = _sorted_live(x, dropped)
+    return jnp.mean(s[k_drop + k_trim: R - k_trim], axis=0, keepdims=True)
+
+
+def masked_coordinate_median(
+    x: jax.Array, dropped: jax.Array, k_drop: int
+) -> jax.Array:
+    """Per-coordinate median over the live replicas; returns the
+    (1, ...) consensus row."""
+    R = x.shape[0]
+    live = R - k_drop
+    if live < 1:
+        raise ValueError("coordinate_median needs at least one live replica")
+    s = _sorted_live(x, dropped)
+    lo = s[k_drop + (live - 1) // 2]
+    hi = s[k_drop + live // 2]
+    return ((lo + hi) / 2)[None]
+
+
+def survivor_weighted_fn(
+    fn: Callable[[jax.Array], jax.Array], live: jax.Array
+) -> Callable[[jax.Array], jax.Array]:
+    """Wrap a linear mixing map as its survivor-renormalized version.
+
+    Values travel as ``(w * x, w)`` pairs with ``w = live``; the mixed
+    value is ``fn(w * x) / fn(w)`` where the survivor mass ``fn(w)`` is
+    clamped away from zero (a replica whose whole in-neighborhood
+    dropped divides by ~0 mass; it is dropped-adjacent and gets ~0
+    output, then masked to exactly 0 by the caller's live mask).
+    """
+    def mixed(x: jax.Array) -> jax.Array:
+        w = live.astype(x.dtype).reshape((-1,) + (1,) * (x.ndim - 1))
+        num = fn(w * x)
+        den = fn(jnp.broadcast_to(w, x.shape))
+        tiny = jnp.array(jnp.finfo(x.dtype).tiny, x.dtype)
+        return num / jnp.maximum(den, tiny)
+
+    return mixed
+
+
+def robust_reduce(
+    aggregation: str,
+    x: jax.Array,
+    dropped: jax.Array,
+    k_drop: int,
+    k_trim: int,
+) -> jax.Array:
+    """Dispatch the consensus-style aggregators on a dense (R, ...)
+    leaf, broadcasting the consensus row back to every live replica
+    (dropped replicas get zero — no update)."""
+    if aggregation == "trimmed_mean":
+        agg = masked_trimmed_mean(x, dropped, k_drop, k_trim)
+    elif aggregation == "coordinate_median":
+        agg = masked_coordinate_median(x, dropped, k_drop)
+    else:
+        raise ValueError(f"unknown robust reduce {aggregation!r}")
+    out = jnp.broadcast_to(agg, x.shape)
+    mask = dropped.reshape((-1,) + (1,) * (x.ndim - 1))
+    return jnp.where(mask, jnp.zeros_like(out), out)
+
+
+def tree_robust_reduce(
+    aggregation: str, tree: Any, dropped: jax.Array, k_drop: int, k_trim: int
+) -> Any:
+    return jax.tree.map(
+        lambda x: robust_reduce(aggregation, x, dropped, k_drop, k_trim), tree
+    )

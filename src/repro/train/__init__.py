@@ -1,12 +1,18 @@
 from .checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from .scenarios import (
+    TrainScenario, TrainScenarioResult, run_train_scenarios,
+    train_scenario_matrix,
+)
 from .step import (
     consensus_distance, init_decentralized_state, init_train_state,
-    make_decentralized_step, make_train_step,
+    make_decentralized_step, make_train_step, survivor_consensus_distance,
 )
 from .trainer import Trainer
 
 __all__ = [
-    "Trainer", "consensus_distance", "init_decentralized_state",
-    "init_train_state", "latest_step", "make_decentralized_step",
-    "make_train_step", "restore_checkpoint", "save_checkpoint",
+    "Trainer", "TrainScenario", "TrainScenarioResult", "consensus_distance",
+    "init_decentralized_state", "init_train_state", "latest_step",
+    "make_decentralized_step", "make_train_step", "restore_checkpoint",
+    "run_train_scenarios", "save_checkpoint", "survivor_consensus_distance",
+    "train_scenario_matrix",
 ]

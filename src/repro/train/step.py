@@ -46,7 +46,7 @@ import jax.numpy as jnp
 
 from repro.dist import (
     SyncConfig, build_sync_plan, execute_sync, execute_sync_sharded,
-    init_inflight, init_residual, plan_wire_bytes,
+    init_inflight, init_residual, plan_wire_bytes, replica_fault_masks,
 )
 from repro.models import loss_fn
 from repro.models.config import ModelConfig
@@ -57,6 +57,7 @@ from repro.optim.optimizers import (
 __all__ = [
     "make_train_step", "make_decentralized_step",
     "init_train_state", "init_decentralized_state", "consensus_distance",
+    "survivor_consensus_distance",
 ]
 
 
@@ -133,6 +134,25 @@ def consensus_distance(params) -> jax.Array:
         sq = sq + jnp.sum(d * d)
         n = n + p.size
     return jnp.sqrt(sq / max(n, 1))
+
+
+def survivor_consensus_distance(params, live) -> jax.Array:
+    """`consensus_distance` restricted to the live replicas of a faulty
+    sync step: RMS distance of the live replicas from the *live* mean.
+    Dropped replicas neither shift the reference mean nor contribute
+    error — degradation is measured over the replicas still training."""
+    live_f = live.astype(jnp.float32)
+    cnt = jnp.maximum(jnp.sum(live_f), 1.0)
+    sq = 0.0
+    n = 0.0
+    for p in jax.tree.leaves(params):
+        pf = p.astype(jnp.float32)
+        w = live_f.reshape((-1,) + (1,) * (pf.ndim - 1))
+        mean = jnp.sum(pf * w, axis=0, keepdims=True) / cnt
+        d = (pf - mean) * w
+        sq = sq + jnp.sum(d * d)
+        n = n + cnt * (p.size // p.shape[0])
+    return jnp.sqrt(sq / jnp.maximum(n, 1.0))
 
 
 def _tree_select(cond, on_true, on_false):
@@ -239,6 +259,22 @@ def make_decentralized_step(
             new_state["residuals"] = new_residuals
         if overlapped:
             new_state["prev_grads"] = prev_grads
+        # degradation metrics: recompute the sync index's fault masks
+        # (deterministic in (seed, step), so this matches what the
+        # executor injected) and report consensus over survivors only
+        if plan.faulty:
+            sync_idx = state["step"] - 1 if overlapped else state["step"]
+            faults = replica_fault_masks(plan.failures, R, sync_idx)
+            surv_err = survivor_consensus_distance(params, faults.live)
+            eff_frac = jnp.mean(faults.live.astype(jnp.float32))
+            rejected = (
+                jnp.sum(faults.byzantine.astype(jnp.float32))
+                if plan.robust_consensus else jnp.float32(0.0)
+            )
+        else:
+            surv_err = consensus_distance(params)
+            eff_frac = jnp.float32(1.0)
+            rejected = jnp.float32(0.0)
         metrics = {
             "loss": losses.mean(),
             "grad_norm": gnorm,
@@ -252,6 +288,11 @@ def make_decentralized_step(
             "sync_overlap_fraction": (
                 warm.astype(jnp.float32) if overlapped else jnp.float32(0.0)
             ),
+            # fault-degradation metrics (inert without plan.failures:
+            # survivor error == consensus_distance, fraction 1, count 0)
+            "survivor_consensus_error": surv_err,
+            "effective_replica_fraction": eff_frac,
+            "rejected_gradient_count": rejected,
         }
         return new_state, metrics
 

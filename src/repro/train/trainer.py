@@ -63,6 +63,13 @@ class Trainer:
         # per-run semantics as wire_bytes_total
         self._overlap_sum = 0.0
         self._overlap_steps = 0
+        # fault-degradation accumulators (steps that report the
+        # SyncFailureModel metrics — see make_decentralized_step):
+        # total Byzantine gradients rejected by robust aggregation, and
+        # a running mean of the live-replica fraction
+        self.rejected_gradients_total = 0.0
+        self._eff_replica_sum = 0.0
+        self._eff_replica_steps = 0
         if ckpt_dir and latest_step(ckpt_dir) is not None:
             self.state, step = restore_checkpoint(ckpt_dir, self.state)
             print(f"[trainer] resumed from step {step}")
@@ -103,6 +110,15 @@ class Trainer:
                 self._overlap_steps += 1
                 rec["sync_overlap_fraction_mean"] = (
                     self._overlap_sum / self._overlap_steps
+                )
+            if "rejected_gradient_count" in rec:
+                self.rejected_gradients_total += rec["rejected_gradient_count"]
+                rec["rejected_gradients_total"] = self.rejected_gradients_total
+            if "effective_replica_fraction" in rec:
+                self._eff_replica_sum += rec["effective_replica_fraction"]
+                self._eff_replica_steps += 1
+                rec["effective_replica_fraction_mean"] = (
+                    self._eff_replica_sum / self._eff_replica_steps
                 )
             t_last = now
             self._log(rec)

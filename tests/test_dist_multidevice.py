@@ -195,6 +195,79 @@ def test_sharded_executor_matches_dense_and_overlaps():
     assert "ASYNC OK" in out
 
 
+def test_sharded_executor_failure_parity_with_dense():
+    """Fault injection on the 8-device replica mesh: the per-program
+    masks recomputed inside shard_map must match the dense executor's
+    global draw for the same (seed, step) — outputs agree across every
+    aggregation mode, dropped rows are zero on both paths, and an inert
+    SyncFailureModel stays bitwise-identical to a failure-free plan."""
+    out = _run("""
+    import dataclasses
+    from repro.dist import (CompressionConfig, SyncConfig, SyncFailureModel,
+                            build_sync_plan, execute_sync,
+                            execute_sync_sharded, init_residual,
+                            replica_fault_masks)
+
+    R = 8
+    mesh = jax.make_mesh((R,), ("replica",))
+    sh = NamedSharding(mesh, P("replica", None))
+    g = {"w": jax.device_put(
+        jnp.asarray(np.random.default_rng(0).normal(size=(R, 96)), jnp.float32),
+        sh)}
+    fm = SyncFailureModel(churn_fraction=0.25, straggler_fraction=0.125,
+                          byzantine_fraction=0.125, seed=11)
+    cases = {
+        "mean": SyncConfig("multiscale", failures=fm),
+        "survivor": SyncConfig("multiscale", aggregation="survivor_weighted",
+                               failures=fm),
+        "trimmed": SyncConfig("allreduce", aggregation="trimmed_mean",
+                              failures=fm),
+        "median": SyncConfig("allreduce", aggregation="coordinate_median",
+                             failures=fm),
+        "topk_churn": SyncConfig("multiscale",
+                                 compression=CompressionConfig("topk", 0.25),
+                                 failures=fm),
+        "rotated_churn": SyncConfig("multiscale", rotation_period=3,
+                                    rotation_seed=5, failures=fm),
+    }
+    for name, cfg in cases.items():
+        plan = build_sync_plan(cfg, R)
+        res = (init_residual(g)
+               if plan.compression.scheme != "none" else None)
+        f = jax.jit(lambda x, r, s, p=plan: execute_sync_sharded(
+            p, x, r, s, mesh=mesh))
+        for step in (0, 3):
+            dense, dres = execute_sync(plan, g, res, step)
+            sharded, sres = f(g, res, jnp.int32(step))
+            np.testing.assert_allclose(
+                np.asarray(dense["w"]), np.asarray(sharded["w"]),
+                rtol=2e-6, atol=2e-6)
+            if res is not None:
+                np.testing.assert_allclose(
+                    np.asarray(dres["w"]), np.asarray(sres["w"]),
+                    rtol=2e-6, atol=2e-6)
+            dropped = np.asarray(replica_fault_masks(fm, R, step).dropped)
+            assert dropped.sum() == 3
+            assert np.all(np.asarray(sharded["w"])[dropped] == 0.0), name
+        print("FAULT PARITY", name)
+
+    # inert model: bitwise equality with the failure-free plan, sharded
+    clean = build_sync_plan(SyncConfig("multiscale"), R)
+    inert = build_sync_plan(
+        SyncConfig("multiscale", failures=SyncFailureModel()), R)
+    fc = jax.jit(lambda x, s, p=clean: execute_sync_sharded(
+        p, x, None, s, mesh=mesh))
+    fi = jax.jit(lambda x, s, p=inert: execute_sync_sharded(
+        p, x, None, s, mesh=mesh))
+    a, _ = fc(g, jnp.int32(1))
+    b, _ = fi(g, jnp.int32(1))
+    np.testing.assert_array_equal(np.asarray(a["w"]), np.asarray(b["w"]))
+    print("INERT BITWISE OK")
+    """)
+    assert out.count("FAULT PARITY") == 6
+    assert "INERT BITWISE OK" in out
+
+
 def test_elastic_checkpoint_restore_across_meshes():
     out = _run("""
     import tempfile
@@ -225,7 +298,9 @@ def test_trial_mesh_sharding_matches_unsharded():
     device count (padding trials are discarded)."""
     out = _run("""
     from jax.sharding import Mesh
-    from repro.core import build_plan, execute_plan, random_geometric_graph
+    from repro.core import (
+        ExecOptions, build_plan, execute_plan, random_geometric_graph,
+    )
 
     g = random_geometric_graph(90, seed=7)
     x0 = np.random.default_rng(4).normal(0, 1, 90)
@@ -233,7 +308,8 @@ def test_trial_mesh_sharding_matches_unsharded():
     mesh = Mesh(np.array(jax.devices()), ("trials",))
     seeds = tuple(range(6))  # 6 trials on 8 devices: forces padding
     sharded = execute_plan(
-        plan, x0, eps=1e-4, seeds=seeds, weighted=True, mesh=mesh)
+        plan, x0, eps=1e-4, seeds=seeds, weighted=True,
+        options=ExecOptions(mesh=mesh))
     dense = execute_plan(plan, x0, eps=1e-4, seeds=seeds, weighted=True)
     assert sharded.x_final.shape == (6, 90)
     np.testing.assert_array_equal(sharded.x_final, dense.x_final)
@@ -252,7 +328,9 @@ def test_node_mesh_2d_matches_trial_mesh():
     1-axis trial mesh, in the eps-oracle AND fixed-iterations modes."""
     out = _run("""
     from jax.sharding import Mesh
-    from repro.core import build_plan, execute_plan, random_geometric_graph
+    from repro.core import (
+        ExecOptions, build_plan, execute_plan, random_geometric_graph,
+    )
 
     g = random_geometric_graph(200, seed=11)
     x0 = np.random.default_rng(6).normal(0, 1, 200)
@@ -263,9 +341,11 @@ def test_node_mesh_2d_matches_trial_mesh():
     for kw in (dict(eps=1e-4), dict(eps=1e-3, fixed_ticks_scale=1.0)):
         seeds = (0, 1, 2)  # 3 trials on a 2-way trial axis: forces padding
         node = execute_plan(
-            plan, x0, seeds=seeds, weighted=True, mesh=mesh2d, **kw)
+            plan, x0, seeds=seeds, weighted=True,
+            options=ExecOptions(mesh=mesh2d), **kw)
         trial = execute_plan(
-            plan, x0, seeds=seeds, weighted=True, mesh=mesh1d, **kw)
+            plan, x0, seeds=seeds, weighted=True,
+            options=ExecOptions(mesh=mesh1d), **kw)
         dense = execute_plan(plan, x0, seeds=seeds, weighted=True, **kw)
         for other in (trial, dense):
             np.testing.assert_array_equal(node.x_final, other.x_final)
@@ -280,12 +360,14 @@ def test_node_mesh_2d_matches_trial_mesh():
     # guardrails: the node-sharded path is presampled-only and cannot
     # collect per-edge usage (counters live sharded)
     try:
-        execute_plan(plan, x0, seeds=(0,), mesh=mesh2d, schedule="per_tick")
+        execute_plan(plan, x0, seeds=(0,),
+                     options=ExecOptions(mesh=mesh2d, schedule="per_tick"))
         raise AssertionError("per_tick + node mesh must be rejected")
     except ValueError:
         pass
     try:
-        execute_plan(plan, x0, seeds=(0,), mesh=mesh2d, collect_usage=True)
+        execute_plan(plan, x0, seeds=(0,),
+                     options=ExecOptions(mesh=mesh2d, collect_usage=True))
         raise AssertionError("collect_usage + node mesh must be rejected")
     except ValueError:
         pass

@@ -31,7 +31,10 @@ from repro.core import (
     expected_retransmissions,
     multiscale_gossip,
     price_messages,
+    level_edge_messages,
+    price_edge_messages,
     random_geometric_graph,
+    route_edge_transmissions,
     run_scenario_matrix,
     scenario_matrix,
 )
@@ -141,47 +144,32 @@ def test_price_messages_supersedes_handshake_cost():
     assert float(exact.retransmissions[0]) == msgs * (1 - p) / p
 
 
-def test_legacy_kwargs_warn_and_match_options(setup):
+def test_legacy_flat_kwargs_removed(setup):
+    """PR 9's one-release deprecation window has expired: the flat
+    execute kwargs are gone, and a stale call fails loudly as a
+    TypeError instead of silently warning."""
     g, plan, x0 = setup
-    new = _run(plan, x0, options=ExecOptions(backend="lax", check_every=32))
-    with pytest.warns(DeprecationWarning, match="deprecated"):
-        old = _run(plan, x0, backend="lax", check_every=32)
-    assert np.array_equal(new.x_final, old.x_final)
-    assert np.array_equal(new.messages, old.messages)
-    assert np.array_equal(new.node_sends, old.node_sends)
-
-
-def test_legacy_loss_p_matches_failure_model(setup):
-    g, plan, x0 = setup
-    new = _run(plan, x0, failures=FailureModel(loss_p=0.9))
-    with pytest.warns(DeprecationWarning, match="loss_p"):
-        old = _run(plan, x0, loss_p=0.9)
-    assert np.array_equal(new.x_final, old.x_final)
-    assert np.array_equal(new.messages, old.messages)
-
-
-def test_ambiguous_call_forms_raise(setup):
-    g, plan, x0 = setup
-    with pytest.raises(ValueError, match="one call form"), \
-            pytest.warns(DeprecationWarning):
-        _run(plan, x0, options=ExecOptions(), backend="lax")
-    with pytest.raises(ValueError, match="one call form"), \
-            pytest.warns(DeprecationWarning):
-        _run(plan, x0, failures=FailureModel(loss_p=0.9), loss_p=0.9)
+    with pytest.raises(TypeError):
+        _run(plan, x0, backend="lax", check_every=32)
+    with pytest.raises(TypeError):
+        _run(plan, x0, loss_p=0.9)
+    with pytest.raises(TypeError):
+        multiscale_gossip(
+            g, x0, eps=1e-3, seed=0, trials=2, plan=plan, backend="lax",
+        )
 
 
 def test_multiscale_gossip_threads_options(setup):
+    """options= reaches the engine: the explicit default matches the
+    no-options call bitwise."""
     g, plan, x0 = setup
     new = multiscale_gossip(
         g, x0, eps=1e-3, seed=0, trials=2, plan=plan,
         options=ExecOptions(backend="lax"),
     )
-    with pytest.warns(DeprecationWarning):
-        old = multiscale_gossip(
-            g, x0, eps=1e-3, seed=0, trials=2, plan=plan, backend="lax",
-        )
-    assert np.array_equal(new.x_final, old.x_final)
-    assert np.array_equal(new.messages, old.messages)
+    default = multiscale_gossip(g, x0, eps=1e-3, seed=0, trials=2, plan=plan)
+    assert np.array_equal(new.x_final, default.x_final)
+    assert np.array_equal(new.messages, default.messages)
 
 
 def test_scenario_and_cost_require_presampled(setup):
@@ -303,6 +291,123 @@ def test_regional_window_coerced_and_validated():
         FailureModel(regional_window=(-0.1, 0.5))
     with pytest.raises(ValueError, match="regional_window"):
         FailureModel(regional_window=(0.25,))
+
+
+# ----------------- heterogeneous per-link loss/energy ------------------
+
+
+def _overlay_edge_messages(plan, res, trial=0):
+    """(lp, per-edge logical transmissions) for every overlay level."""
+    out = []
+    for li, lp in enumerate(plan.levels):
+        if lp.kind != "overlay":
+            continue
+        out.append((lp, level_edge_messages(lp, res.edge_usage[li][trial])))
+    assert out
+    return out
+
+
+def test_route_edge_transmissions_is_two_hops(setup):
+    """The incidence scatter independently reproduces 2 * route hops
+    per exchange (endpoints once, relays twice)."""
+    g, plan, x0 = setup
+    for lp in plan.levels:
+        if lp.kind != "overlay":
+            continue
+        tx = route_edge_transmissions(lp)
+        hops = np.asarray(lp.hop_flat, np.int64)[lp.edge_pos_i]
+        np.testing.assert_array_equal(tx, 2 * hops)
+
+
+def test_per_edge_messages_sum_to_level_total(setup):
+    """Summing the per-edge breakdown recovers the engine's per-level
+    logical message count exactly."""
+    g, plan, x0 = setup
+    res = _run(plan, x0, options=ExecOptions(collect_usage=True))
+    for li, lp in enumerate(plan.levels):
+        if lp.kind != "overlay":
+            continue
+        for t in range(len(SEEDS)):
+            em = level_edge_messages(lp, res.edge_usage[li][t])
+            assert int(em.sum()) == int(res.level_messages[t, li]), (li, t)
+
+
+def test_per_edge_pricing_constant_tuple_matches_scalar(setup):
+    """Parity: a constant per-edge tuple prices identically to the
+    scalar model, and both match the homogeneous `price_messages` path
+    on the summed count (with loss folded into the delivery p)."""
+    g, plan, x0 = setup
+    res = _run(plan, x0, options=ExecOptions(collect_usage=True))
+    lp, em = _overlay_edge_messages(plan, res)[0]
+    E = len(em)
+    hop, retx_p, loss = 1.5, 0.8, 0.9
+    scalar = price_edge_messages(
+        em, CostModel(hop_energy=hop, retransmit_p=retx_p, sample=False),
+        FailureModel(loss_p=loss),
+    )
+    tupled = price_edge_messages(
+        em,
+        CostModel(hop_energy=(hop,) * E, retransmit_p=retx_p, sample=False),
+        FailureModel(loss_p=(loss,) * E),
+    )
+    np.testing.assert_allclose(tupled.energy, scalar.energy)
+    np.testing.assert_allclose(tupled.retransmissions, scalar.retransmissions)
+    np.testing.assert_array_equal(tupled.transmissions, scalar.transmissions)
+    homo = price_messages(
+        int(em.sum()),
+        CostModel(hop_energy=hop, retransmit_p=retx_p * loss, sample=False),
+    )
+    np.testing.assert_allclose(scalar.energy, homo.energy, rtol=1e-12)
+
+
+def test_per_edge_heterogeneity_is_local(setup):
+    """Doubling ONE edge's hop_energy adds exactly that edge's base
+    energy — per-edge pricing is a local, decomposable sum."""
+    g, plan, x0 = setup
+    res = _run(plan, x0, options=ExecOptions(collect_usage=True))
+    lp, em = _overlay_edge_messages(plan, res)[0]
+    e = int(np.argmax(em))
+    assert em[e] > 0
+    base = price_edge_messages(
+        em, CostModel(hop_energy=(1.0,) * len(em), sample=False))
+    he = [1.0] * len(em)
+    he[e] = 2.0
+    bumped = price_edge_messages(
+        em, CostModel(hop_energy=tuple(he), sample=False))
+    np.testing.assert_allclose(
+        bumped.energy - base.energy, base.level_energy[:, e])
+
+
+def test_heterogeneous_models_are_closed_form_only(setup):
+    """Per-edge tuples coerce/hash like regional_window, but every
+    schedule-level consumer rejects them with a pointer at the
+    closed-form path."""
+    g, plan, x0 = setup
+    fm = FailureModel(loss_p=[0.9, 0.8])        # list coerces to tuple
+    cm = CostModel(hop_energy=[1.0, 2.0], sample=False)
+    assert fm.loss_p == (0.9, 0.8) and fm.heterogeneous
+    assert cm.hop_energy == (1.0, 2.0) and cm.heterogeneous
+    hash((fm, cm))
+    with pytest.raises(ValueError, match="price_edge_messages"):
+        _run(plan, x0, failures=fm)
+    with pytest.raises(ValueError, match="price_edge_messages"):
+        _run(plan, x0, cost=cm)
+    with pytest.raises(ValueError, match="price_edge_messages"):
+        price_messages(100, cm)
+    # per-edge sampling has no schedule: sample=True models are rejected
+    with pytest.raises(ValueError, match="sample"):
+        price_edge_messages(
+            np.ones(2, np.int64), CostModel(hop_energy=(1.0, 2.0),
+                                            retransmit_p=0.5))
+    # entry validation mirrors the scalar paths
+    with pytest.raises(ValueError, match="loss_p"):
+        FailureModel(loss_p=(0.9, 0.0))
+    with pytest.raises(ValueError):
+        CostModel(hop_energy=(1.0, -2.0))
+    with pytest.raises(ValueError, match="edges"):
+        price_edge_messages(
+            np.ones(3, np.int64),
+            CostModel(hop_energy=(1.0, 2.0), sample=False))
 
 
 def test_dataclass_validation():

@@ -3,6 +3,8 @@ import numpy as np
 import pytest
 
 from repro.core import (
+    ExecOptions,
+    FailureModel,
     multiscale_gossip,
     path_averaging,
     random_geometric_graph,
@@ -84,8 +86,9 @@ def test_beats_path_averaging(rgg500, x0_500):
 
 def test_message_loss_degrades_accuracy(rgg500, x0_500):
     lossy = multiscale_gossip(
-        rgg500, x0_500, eps=1e-4, seed=0, weighted=True, loss_p=0.9,
-        max_ticks_per_level=20_000,
+        rgg500, x0_500, eps=1e-4, seed=0, weighted=True,
+        failures=FailureModel(loss_p=0.9),
+        options=ExecOptions(max_ticks_per_level=20_000),
     )
     reliable = multiscale_gossip(rgg500, x0_500, eps=1e-4, seed=0, weighted=True)
     # §VI-C-2: under message loss the accuracy target is unreachable

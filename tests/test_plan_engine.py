@@ -5,6 +5,7 @@ import numpy as np
 import pytest
 
 from repro.core import (
+    ExecOptions,
     Graph,
     batched_greedy_routes,
     batched_routes_to_nodes,
@@ -94,7 +95,8 @@ def _legacy_overlay_sends(lp, usage, n):
 def test_csr_attribution_matches_legacy_dict(rgg500, x0_500):
     plan = build_plan(rgg500, seed=0)
     res = execute_plan(
-        plan, x0_500, eps=1e-4, seeds=(0,), weighted=True, collect_usage=True
+        plan, x0_500, eps=1e-4, seeds=(0,), weighted=True,
+        options=ExecOptions(collect_usage=True),
     )
     overlay_total = np.zeros(500, np.int64)
     checked = 0
@@ -173,10 +175,12 @@ def test_pallas_backend_matches_lax():
     x0 = np.random.default_rng(2).normal(0, 1, 120)
     plan = build_plan(g, seed=0)
     a = multiscale_gossip(
-        g, x0, eps=1e-4, seed=0, weighted=True, plan=plan, backend="lax"
+        g, x0, eps=1e-4, seed=0, weighted=True, plan=plan,
+        options=ExecOptions(backend="lax"),
     )
     b = multiscale_gossip(
-        g, x0, eps=1e-4, seed=0, weighted=True, plan=plan, backend="pallas"
+        g, x0, eps=1e-4, seed=0, weighted=True, plan=plan,
+        options=ExecOptions(backend="pallas"),
     )
     # identical exchange sequence => identical message/send accounting;
     # values agree up to f32 matmul rounding
@@ -187,7 +191,9 @@ def test_pallas_backend_matches_lax():
 
 def test_unknown_backend_rejected(rgg500, x0_500):
     with pytest.raises(ValueError):
-        multiscale_gossip(rgg500, x0_500, backend="cuda")
+        multiscale_gossip(
+            rgg500, x0_500, options=ExecOptions(backend="cuda")
+        )
 
 
 def test_single_level_plan_counts_reps():

@@ -10,7 +10,7 @@ both the lax backend and the pallas kernel in interpret mode.
 import numpy as np
 import pytest
 
-from repro.core import build_plan, execute_plan
+from repro.core import ExecOptions, build_plan, execute_plan
 from repro.core.plan import PLAN_METHODS
 
 _LP_ARRAY_FIELDS = (
@@ -62,7 +62,9 @@ def test_plan_methods_execute_identically(rgg500, x0_500, backend):
     results = {
         m: execute_plan(
             p, x0_500, eps=1e-4, seeds=(0,), weighted=True,
-            backend=backend, interpret=True, collect_usage=True,
+            options=ExecOptions(
+                backend=backend, interpret=True, collect_usage=True,
+            ),
         )
         for m, p in plans.items()
     }

@@ -1,0 +1,361 @@
+"""Fault-tolerant gradient sync: failure injection, robust aggregation,
+EF-residual recovery (dist.failures / dist.robust).
+
+The load-bearing invariants:
+
+* fault masks are deterministic in (seed, step), mutually disjoint, and
+  hit their exact static counts — identical across every executor;
+* an inert `SyncFailureModel` (all fractions 0, or None) is
+  bitwise-invisible on the dense and async executors;
+* EF compression conserves mass bitwise under drops: a dropped
+  replica's whole accumulator (gradient + residual) lands in its new
+  residual, and re-enters the stream when the replica rejoins;
+* trimmed-mean consensus bounds the output by the honest gradient
+  range even under 10x-scaled Byzantine payloads, where plain mean is
+  dragged far outside it;
+* survivor-weighted mixing renormalizes the doubly-stochastic mass
+  over live replicas (constant stream -> live rows keep the constant);
+* the decentralized train step converges end-to-end under
+  churn + Byzantine <= 0.25 with trimmed_mean, and reports the
+  degradation metrics.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduce_config
+from repro.data import SyntheticLM
+from repro.dist import (
+    CompressionConfig, SyncConfig, SyncFailureModel, async_execute_sync,
+    build_sync_plan, execute_sync, fault_counts, init_inflight,
+    init_residual, replica_fault_masks,
+)
+from repro.dist.compression import compress, decompress
+from repro.models import Transformer
+from repro.optim import sgdm
+from repro.train import (
+    init_decentralized_state, make_decentralized_step, run_train_scenarios,
+    train_scenario_matrix,
+)
+
+R = 8
+
+
+def _grads(seed=0, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return {
+        "a": jnp.asarray(scale * rng.normal(size=(R, 6, 3)), jnp.float32),
+        "b": jnp.asarray(scale * rng.normal(size=(R, 10)), jnp.float32),
+    }
+
+
+def _tree_eq(a, b):
+    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+# --------------------------- model validation ----------------------------
+
+
+def test_failure_model_validation():
+    with pytest.raises(ValueError, match="churn_fraction"):
+        SyncFailureModel(churn_fraction=1.0)
+    with pytest.raises(ValueError, match="byzantine_fraction"):
+        SyncFailureModel(byzantine_fraction=-0.1)
+    with pytest.raises(ValueError, match="byzantine_scale"):
+        SyncFailureModel(byzantine_scale=-1.0)
+    assert not SyncFailureModel().active
+    assert SyncFailureModel(churn_fraction=0.25).active
+    hash(SyncFailureModel(churn_fraction=0.25))
+
+
+def test_plan_rejects_infeasible_failure_budgets():
+    # everyone fails: no live replica left
+    with pytest.raises(ValueError, match="live"):
+        build_sync_plan(
+            SyncConfig("multiscale",
+                       failures=SyncFailureModel(churn_fraction=0.5,
+                                                 straggler_fraction=0.5)),
+            R,
+        )
+    # trimmed mean needs at least one survivor after trimming
+    with pytest.raises(ValueError, match="trimmed"):
+        build_sync_plan(
+            SyncConfig("allreduce", aggregation="trimmed_mean",
+                       failures=SyncFailureModel(churn_fraction=0.375,
+                                                 byzantine_fraction=0.375)),
+            R,
+        )
+    with pytest.raises(ValueError, match="aggregation"):
+        SyncConfig("multiscale", aggregation="krum")
+
+
+# ------------------------------ fault masks ------------------------------
+
+
+def test_fault_masks_deterministic_disjoint_exact_counts():
+    fm = SyncFailureModel(churn_fraction=0.25, straggler_fraction=0.125,
+                          byzantine_fraction=0.25, seed=3)
+    kc, ks, kb = fault_counts(fm, R)
+    assert (kc, ks, kb) == (2, 1, 2)
+    seen = []
+    for step in range(6):
+        f = replica_fault_masks(fm, R, step)
+        c, s, b = (np.asarray(f.churned), np.asarray(f.straggler),
+                   np.asarray(f.byzantine))
+        assert (c.sum(), s.sum(), b.sum()) == (kc, ks, kb)
+        assert not np.any(c & s) and not np.any(c & b) and not np.any(s & b)
+        np.testing.assert_array_equal(np.asarray(f.dropped), c | s)
+        np.testing.assert_array_equal(np.asarray(f.live), ~(c | s))
+        # determinism in (seed, step)
+        g = replica_fault_masks(fm, R, step)
+        np.testing.assert_array_equal(np.asarray(g.dropped), c | s)
+        seen.append(tuple(np.flatnonzero(c | s | b)))
+    assert len(set(seen)) > 1  # masks vary across steps
+
+
+# ----------------------- inert model is invisible ------------------------
+
+
+@pytest.mark.parametrize("cfg", [
+    SyncConfig("multiscale", rotation_period=3),
+    SyncConfig("ring", compression=CompressionConfig("topk", 0.25)),
+    SyncConfig("allreduce"),
+])
+def test_inert_failure_model_bitwise_identical(cfg):
+    """failures=SyncFailureModel() (all fractions 0) must be
+    bitwise-invisible on the dense AND async executors (the sharded
+    executor is pinned in test_dist_multidevice)."""
+    base = build_sync_plan(cfg, R)
+    inert = build_sync_plan(
+        dataclasses.replace(cfg, failures=SyncFailureModel()), R)
+    assert not inert.faulty
+    G = _grads(1)
+    res = init_residual(G) if cfg.compression.scheme != "none" else None
+    for step in range(3):
+        m0, r0 = execute_sync(base, G, res, step)
+        m1, r1 = execute_sync(inert, G, res, step)
+        _tree_eq(m0, m1)
+        if res is not None:
+            _tree_eq(r0, r1)
+    fa0 = init_inflight(G)
+    fa1 = init_inflight(G)
+    ra0, ra1 = res, res
+    ocfg = dataclasses.replace(cfg, overlap="one_step")
+    op0 = build_sync_plan(ocfg, R)
+    op1 = build_sync_plan(
+        dataclasses.replace(ocfg, failures=SyncFailureModel()), R)
+    for step in range(3):
+        a0, fa0, ra0 = async_execute_sync(op0, G, fa0, ra0, step)
+        a1, fa1, ra1 = async_execute_sync(op1, G, fa1, ra1, step)
+        _tree_eq(a0, a1)
+        _tree_eq(fa0, fa1)
+
+
+# ----------------- EF mass conservation / recovery -----------------------
+
+
+@pytest.mark.parametrize("scheme,arg", [("topk", 0.25), ("int8", 0.25)])
+def test_ef_mass_conservation_under_drops_bitwise(scheme, arg):
+    """A dropped replica's new residual is EXACTLY grads + residuals
+    (the whole accumulator, bitwise): nothing it would have transmitted
+    is lost, and live replicas' residuals are untouched by the drop."""
+    fm = SyncFailureModel(churn_fraction=0.25, straggler_fraction=0.125,
+                          seed=5)
+    comp = CompressionConfig(scheme, arg)
+    faulty = build_sync_plan(
+        SyncConfig("multiscale", compression=comp, failures=fm), R)
+    clean = build_sync_plan(SyncConfig("multiscale", compression=comp), R)
+    G = _grads(2)
+    res = jax.tree.map(
+        lambda g: 0.1 * g, G)  # nonzero residual state to conserve
+    step = 1
+    mixed, new_res = execute_sync(faulty, G, res, step)
+    _, clean_res = execute_sync(clean, G, res, step)
+    f = replica_fault_masks(fm, R, step)
+    dropped = np.asarray(f.dropped)
+    assert dropped.sum() == 3
+    for k in G:
+        acc = np.asarray(G[k]) + np.asarray(res[k])
+        # dropped rows: full accumulator in the residual, zero applied
+        np.testing.assert_array_equal(
+            np.asarray(new_res[k])[dropped], acc[dropped])
+        np.testing.assert_array_equal(
+            np.asarray(mixed[k])[dropped], np.zeros_like(acc[dropped]))
+        # live rows: residuals bitwise-identical to the reliable run
+        np.testing.assert_array_equal(
+            np.asarray(new_res[k])[~dropped],
+            np.asarray(clean_res[k])[~dropped])
+
+
+def test_ef_recovery_reinjects_on_rejoin():
+    """The EF-recovery story: mass parked in a dropped replica's
+    residual re-enters its transmitted accumulator at the next step it
+    is live — the two-step payload sum equals what two reliable steps
+    would have transmitted."""
+    fm = SyncFailureModel(churn_fraction=0.25, seed=5)
+    comp = CompressionConfig("topk", 1.0)  # identity payload, EF plumbing
+    plan = build_sync_plan(
+        SyncConfig("multiscale", compression=comp, failures=fm), R)
+    G = _grads(4)
+    res = init_residual(G)
+    mixed0, res = execute_sync(plan, G, res, 0)
+    d0 = np.asarray(replica_fault_masks(fm, R, 0).dropped)
+    d1 = np.asarray(replica_fault_masks(fm, R, 1).dropped)
+    rejoined = d0 & ~d1
+    assert rejoined.sum() > 0
+    # at step 1, a rejoined replica's accumulator is 2x its constant
+    # gradient (step-0 mass recovered from the residual + fresh grads)
+    payload, _ = compress(G, res, plan.compression)
+    payload = decompress(payload, plan.compression)
+    for k in G:
+        np.testing.assert_allclose(
+            np.asarray(payload[k])[rejoined],
+            2.0 * np.asarray(G[k])[rejoined], rtol=1e-6)
+
+
+# ------------------------- robust aggregation ----------------------------
+
+
+def test_trimmed_mean_bounds_byzantine_norm():
+    """10x-scaled sign-flipped Byzantine payloads drag the plain mean
+    far outside the honest range; trimmed_mean stays inside it."""
+    fm = SyncFailureModel(byzantine_fraction=0.25, byzantine_scale=10.0,
+                          seed=1)
+    trimmed = build_sync_plan(
+        SyncConfig("allreduce", aggregation="trimmed_mean", failures=fm), R)
+    naive = build_sync_plan(SyncConfig("allreduce", failures=fm), R)
+    G = _grads(7)
+    step = 2
+    byz = np.asarray(replica_fault_masks(fm, R, step).byzantine)
+    assert byz.sum() == 2
+    m_t, _ = execute_sync(trimmed, G, None, step)
+    m_n, _ = execute_sync(naive, G, None, step)
+    for k in G:
+        honest_max = np.abs(np.asarray(G[k])[~byz]).max()
+        assert np.abs(np.asarray(m_t[k])).max() <= honest_max + 1e-6
+        assert np.abs(np.asarray(m_n[k])).max() > honest_max
+        # consensus: every replica holds the same trimmed row
+        np.testing.assert_array_equal(
+            np.asarray(m_t[k]),
+            np.broadcast_to(np.asarray(m_t[k])[:1], m_t[k].shape))
+
+
+def test_coordinate_median_ignores_outlier_coordinates():
+    fm = SyncFailureModel(byzantine_fraction=0.125, byzantine_scale=100.0,
+                          seed=2)
+    plan = build_sync_plan(
+        SyncConfig("allreduce", aggregation="coordinate_median",
+                   failures=fm), R)
+    G = {"a": jnp.broadcast_to(jnp.arange(R, dtype=jnp.float32)[:, None],
+                               (R, 4))}
+    m, _ = execute_sync(plan, G, None, 0)
+    vals = np.asarray(m["a"])
+    assert np.all(np.abs(vals) <= R)  # the 100x outlier never leaks
+
+
+def test_survivor_weighted_renormalizes_live_mass():
+    """Constant gradient stream + churn: survivor-weighted mixing keeps
+    live rows at the constant (mass renormalized over survivors), plain
+    mean shrinks them by the dead replicas' missing share."""
+    fm = SyncFailureModel(churn_fraction=0.25, seed=9)
+    const = {"a": jnp.ones((R, 5), jnp.float32)}
+    sw = build_sync_plan(
+        SyncConfig("allreduce", aggregation="survivor_weighted",
+                   failures=fm), R)
+    mean = build_sync_plan(SyncConfig("allreduce", failures=fm), R)
+    step = 0
+    live = np.asarray(replica_fault_masks(fm, R, step).live)
+    m_sw, _ = execute_sync(sw, const, None, step)
+    m_mean, _ = execute_sync(mean, const, None, step)
+    np.testing.assert_allclose(np.asarray(m_sw["a"])[live], 1.0, rtol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(m_mean["a"])[live], live.mean(), rtol=1e-6)
+    # dropped rows receive nothing either way
+    np.testing.assert_array_equal(np.asarray(m_sw["a"])[~live], 0.0)
+
+
+def test_survivor_weighted_is_noop_without_failures():
+    cfg = SyncConfig("multiscale", aggregation="survivor_weighted")
+    plan = build_sync_plan(cfg, R)
+    base = build_sync_plan(SyncConfig("multiscale"), R)
+    G = _grads(3)
+    m0, _ = execute_sync(base, G, None, 0)
+    m1, _ = execute_sync(plan, G, None, 0)
+    _tree_eq(m0, m1)
+
+
+# --------------------- end-to-end training robustness --------------------
+
+
+def _tiny_train(sync, steps=8, Rr=R, fixed_batch=False):
+    cfg = reduce_config(get_config("llama3.2-3b"))
+    model = Transformer(cfg, model_axis=1)
+    opt = sgdm()
+    base = model.init(jax.random.PRNGKey(0))
+    params_r = jax.tree.map(
+        lambda p: jnp.broadcast_to(p[None], (Rr,) + p.shape), base)
+    state = init_decentralized_state(params_r, opt, sync=sync)
+    step = jax.jit(
+        make_decentralized_step(cfg, opt, lambda s: 1e-2, sync, Rr))
+    data = SyntheticLM(cfg.vocab_size, seq_len=16, global_batch=Rr * 2,
+                       seed=5)
+    hist = []
+    for s in range(steps):
+        b = data.batch_at(0 if fixed_batch else s)
+        batch = {k: jnp.asarray(v.reshape(Rr, 2, *v.shape[1:]))
+                 for k, v in b.items()}
+        state, m = step(state, batch)
+        hist.append({k: float(v) for k, v in m.items()})
+    return hist
+
+
+def test_robust_training_converges_under_churn_and_byzantine():
+    """The acceptance bar: churn + Byzantine <= 0.25 of replicas with
+    trimmed_mean still trains (loss decreases end to end), and the
+    degradation metrics report the injected faults.  A fixed batch
+    makes descent deterministic (random-token streams are memorized,
+    not generalized, at this scale)."""
+    fm = SyncFailureModel(churn_fraction=0.125, byzantine_fraction=0.125,
+                          byzantine_scale=10.0, seed=4)
+    sync = SyncConfig("multiscale", aggregation="trimmed_mean", failures=fm)
+    hist = _tiny_train(sync, steps=8, fixed_batch=True)
+    first, last = hist[0]["loss"], hist[-1]["loss"]
+    assert np.isfinite(last) and last < first, (first, last)
+    m = hist[-1]
+    assert m["effective_replica_fraction"] == pytest.approx(7 / 8)
+    assert m["rejected_gradient_count"] == 1.0
+    assert np.isfinite(m["survivor_consensus_error"])
+
+
+def test_degradation_metrics_inert_without_failures():
+    hist = _tiny_train(SyncConfig("multiscale"), steps=2)
+    for m in hist:
+        assert m["effective_replica_fraction"] == 1.0
+        assert m["rejected_gradient_count"] == 0.0
+        assert m["survivor_consensus_error"] == m["consensus_distance"]
+
+
+def test_train_scenario_matrix_smoke():
+    cfg = reduce_config(get_config("llama3.2-3b"))
+    model = Transformer(cfg, model_axis=1)
+    base = model.init(jax.random.PRNGKey(0))  # broadcast happens inside
+    data = SyntheticLM(cfg.vocab_size, seq_len=16, global_batch=R * 2,
+                       seed=5)
+    res = run_train_scenarios(
+        cfg, sgdm(), lambda s: 1e-2, SyncConfig("multiscale"), R,
+        base, data, num_steps=3,
+    )
+    names = [r.scenario.name for r in res]
+    assert names == ["baseline", "churn", "straggler", "byzantine"]
+    by = {r.scenario.name: r for r in res}
+    for r in res:
+        assert len(r.losses) == 3 and np.isfinite(r.final_loss)
+    assert by["baseline"].effective_replica_fraction_mean == 1.0
+    assert by["churn"].effective_replica_fraction_mean < 1.0
+    assert by["byzantine"].rejected_gradients_total > 0
+    # matrix cells are plain dataclasses the caller can extend
+    assert train_scenario_matrix()[0].aggregation == "mean"

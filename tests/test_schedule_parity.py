@@ -11,6 +11,7 @@ import numpy as np
 import pytest
 
 from repro.core import (
+    ExecOptions,
     batched_graphs,
     build_plan,
     compose_schedule,
@@ -226,7 +227,8 @@ def test_engine_presampled_matches_per_tick():
     x0 = np.random.default_rng(2).normal(0, 1, 120)
     plan = build_plan(g, seed=0)
     legacy = execute_plan(
-        plan, x0, eps=1e-4, seeds=(0,), weighted=True, schedule="per_tick"
+        plan, x0, eps=1e-4, seeds=(0,), weighted=True,
+        options=ExecOptions(schedule="per_tick"),
     )
     new = execute_plan(plan, x0, eps=1e-4, seeds=(0,), weighted=True)
     np.testing.assert_array_equal(legacy.x_final, new.x_final)
@@ -240,10 +242,12 @@ def test_engine_matmul_backend():
     x0 = np.random.default_rng(3).normal(0, 1, 100)
     plan = build_plan(g, seed=0)
     a = multiscale_gossip(
-        g, x0, eps=1e-4, seed=0, weighted=True, plan=plan, backend="lax"
+        g, x0, eps=1e-4, seed=0, weighted=True, plan=plan,
+        options=ExecOptions(backend="lax"),
     )
     b = multiscale_gossip(
-        g, x0, eps=1e-4, seed=0, weighted=True, plan=plan, backend="matmul"
+        g, x0, eps=1e-4, seed=0, weighted=True, plan=plan,
+        options=ExecOptions(backend="matmul"),
     )
     assert a.messages == b.messages
     np.testing.assert_array_equal(a.node_sends, b.node_sends)
@@ -259,7 +263,8 @@ def test_engine_single_device_mesh_matches_unsharded():
     plan = build_plan(g, seed=0)
     mesh = Mesh(np.array(jax.devices()), ("trials",))
     sharded = execute_plan(
-        plan, x0, eps=1e-4, seeds=(0, 1, 2), weighted=True, mesh=mesh
+        plan, x0, eps=1e-4, seeds=(0, 1, 2), weighted=True,
+        options=ExecOptions(mesh=mesh),
     )
     dense = execute_plan(plan, x0, eps=1e-4, seeds=(0, 1, 2), weighted=True)
     np.testing.assert_array_equal(sharded.x_final, dense.x_final)
@@ -275,4 +280,6 @@ def test_engine_mesh_rejects_multi_axis():
     plan = build_plan(g, seed=0)
     mesh = Mesh(np.array(jax.devices()).reshape(1, 1), ("a", "b"))
     with pytest.raises(ValueError):
-        execute_plan(plan, np.zeros(30), seeds=(0,), mesh=mesh)
+        execute_plan(
+            plan, np.zeros(30), seeds=(0,), options=ExecOptions(mesh=mesh)
+        )

@@ -39,6 +39,7 @@ SCRATCH = "fig2_levels_check"
 FIG3_BACKENDS = ("lax", "pallas")
 LARGE_N = "large_n_smoke"
 FIG5 = "fig5_smoke"
+ROBUST_TRAIN = "robust_train_smoke"
 # minimum absolute graph_gen_s drift (seconds) that counts as real: the
 # smoke builds in ~0.2s, where scheduler noise alone exceeds 15%
 GRAPH_GEN_FLOOR_S = 0.5
@@ -170,6 +171,118 @@ def check_fig5(tolerance: float) -> list[str]:
     return failures
 
 
+def _run_robust_train(num_steps: int, artifact: str) -> dict:
+    """Run the robust-training scenario smoke (tiny model, R=8,
+    reliable baseline + churn+Byzantine with the trimmed-mean defense)
+    and persist the summary metrics as `artifact`.  Deterministic:
+    fixed model init, fixed synthetic stream, fixed failure seed."""
+    import jax
+
+    from benchmarks.common import save_artifact
+    from repro.data import SyntheticLM
+    from repro.dist import SyncConfig, SyncFailureModel
+    from repro.models import Transformer
+    from repro.models.config import ModelConfig
+    from repro.optim import sgdm
+    from repro.train import TrainScenario, run_train_scenarios
+
+    R = 8
+    cfg = ModelConfig(
+        name="robust-gate", family="dense", num_layers=2, d_model=64,
+        num_heads=4, num_kv_heads=2, head_dim=16, d_ff=128, vocab_size=512,
+        remat=False, dtype="float32",
+    )
+    model = Transformer(cfg, model_axis=1)
+    params = model.init(jax.random.PRNGKey(0))
+    data = SyntheticLM(cfg.vocab_size, seq_len=32, global_batch=R * 2, seed=7)
+    scenarios = [
+        TrainScenario("baseline", None, "mean", "reliable replicas"),
+        TrainScenario(
+            "churn_byzantine",
+            SyncFailureModel(churn_fraction=0.125, byzantine_fraction=0.125,
+                             byzantine_scale=10.0, seed=4),
+            "trimmed_mean",
+            "12.5% churn + 12.5% Byzantine (x10), trimmed-mean defense",
+        ),
+    ]
+    res = run_train_scenarios(
+        cfg, sgdm(), lambda s: 1e-2, SyncConfig("multiscale"), R,
+        params, data, scenarios, num_steps=num_steps,
+    )
+    payload = {
+        "R": R, "num_steps": num_steps,
+        "scenarios": {
+            r.scenario.name: {
+                "final_loss": r.final_loss,
+                "loss_drop": r.loss_drop,
+                "survivor_error_final": r.survivor_error_final,
+                "effective_replica_fraction_mean":
+                    r.effective_replica_fraction_mean,
+                "rejected_gradients_total": r.rejected_gradients_total,
+            }
+            for r in res
+        },
+    }
+    save_artifact(artifact, payload)
+    return payload
+
+
+def check_robust_train(tolerance: float) -> list[str]:
+    """Gate the robust-training smoke: per-scenario final loss,
+    survivor consensus error (floor 1e-3 — a reliable baseline sits at
+    ~0 where relative drift is noise), effective replica fraction, and
+    rejected-gradient totals vs the committed `robust_train_smoke`
+    artifact.  Drift means the failure injection, robust reduction, or
+    degradation metrics changed."""
+    from benchmarks.common import load_artifact
+
+    committed = load_artifact(ROBUST_TRAIN)
+    if committed is None:
+        return [
+            f"  {ROBUST_TRAIN}: committed artifact benchmarks/artifacts/"
+            f"{ROBUST_TRAIN}.json is missing; run `python "
+            f"tools/check_artifacts.py --robust-train-regen` and commit "
+            f"the result"
+        ]
+    print(f"check_artifacts: re-running robust-train smoke "
+          f"(R={committed['R']}, steps={committed['num_steps']}, "
+          f"scenarios={sorted(committed['scenarios'])}) against "
+          f"{ROBUST_TRAIN} (tolerance ±{tolerance:.0%})")
+    fresh = _run_robust_train(
+        int(committed["num_steps"]), f"{ROBUST_TRAIN}_check")
+    failures = []
+
+    def gate(label, want, got, floor):
+        rel = abs(got - want) / max(abs(want), floor)
+        status = "ok" if rel <= tolerance else "DRIFT"
+        print(f"  {label}: committed={want:.4g} fresh={got:.4g} "
+              f"rel={rel:+.1%} [{status}]")
+        if rel > tolerance:
+            failures.append(
+                f"  {ROBUST_TRAIN} {label}: drifted {rel:.1%} "
+                f"(committed {want:.4g} -> fresh {got:.4g}, "
+                f"tolerance {tolerance:.0%})")
+
+    floors = {
+        "final_loss": 1.0,
+        "loss_drop": 0.1,
+        "survivor_error_final": 1e-3,
+        "effective_replica_fraction_mean": 1e-2,
+        "rejected_gradients_total": 1.0,
+    }
+    for name, rec in committed["scenarios"].items():
+        got = fresh["scenarios"].get(name)
+        if got is None:
+            failures.append(
+                f"  {ROBUST_TRAIN} scenario {name}: missing from the "
+                "fresh run")
+            continue
+        for metric, floor in floors.items():
+            gate(f"scenario/{name}/{metric}", float(rec[metric]),
+                 float(got[metric]), floor)
+    return failures
+
+
 def check_large_n(tolerance: float) -> list[str]:
     """Gate the large-n CSR-path smoke (n=20k FI run) message count.
 
@@ -258,10 +371,37 @@ def main() -> int:
                          "slower, run under REPRO_BENCH_SMOKE=1)")
     ap.add_argument("--large-n-only", action="store_true",
                     help="gate ONLY the large-n smoke")
+    ap.add_argument("--robust-train-only", action="store_true",
+                    help="gate ONLY the robust-training scenario smoke "
+                         "(survivor consensus error / loss / degradation "
+                         "metrics vs the committed robust_train_smoke)")
+    ap.add_argument("--robust-train-regen", action="store_true",
+                    help="regenerate the committed robust_train_smoke "
+                         "artifact in place (8 steps) and exit")
     args = ap.parse_args()
 
     from benchmarks import fig2_levels
     from benchmarks.common import load_artifact
+
+    if args.robust_train_regen:
+        _run_robust_train(8, ROBUST_TRAIN)
+        print(f"check_artifacts: regenerated benchmarks/artifacts/"
+              f"{ROBUST_TRAIN}.json — review and commit it")
+        return 0
+
+    if args.robust_train_only:
+        failures = check_robust_train(args.tolerance)
+        if failures:
+            print("check_artifacts: FAIL — robust-train smoke drifted from "
+                  "the committed artifact:")
+            print("\n".join(failures))
+            print("If the drift is intentional (algorithm change), "
+                  "regenerate and commit: python tools/check_artifacts.py "
+                  "--robust-train-regen")
+            return 1
+        print(f"check_artifacts: OK — robust-train smoke within "
+              f"±{args.tolerance:.0%} of the committed artifact")
+        return 0
 
     if args.large_n_only:
         failures = check_large_n(args.tolerance)

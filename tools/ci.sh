@@ -35,6 +35,13 @@
 #                                   #   p2c-from-gossip vs oracle vs random)
 #                                   #   and a BENCH_serve.json trajectory
 #                                   #   entry (fleet + paged-decode tok/s)
+#                                   # + robust-train smoke (R=8, churn +
+#                                   #   Byzantine, trimmed_mean + topk) and
+#                                   #   the robust_train_smoke drift gate
+#                                   #   (tools/check_artifacts.py
+#                                   #   --robust-train-only: survivor
+#                                   #   consensus error / loss / degradation
+#                                   #   metrics ±15%)
 #
 # The slow tier (multi-device subprocess + vmap-/backend-parity tests) is
 # NOT run here — .github/workflows/ci.yml's second job runs `-m slow`.
@@ -83,6 +90,12 @@ if [[ "${REPRO_BENCH_SMOKE:-0}" == "1" ]]; then
     echo "== serving-fleet smoke (16 replicas, 3 routers) + BENCH_serve.json =="
     python examples/serve_fleet.py --replicas 16 --ticks 120
     python -m benchmarks.serve_bench --label "ci smoke"
+    echo "== robust-train smoke (R=8, churn+byzantine, trimmed_mean, topk) =="
+    python examples/robust_training.py --replicas 8 --steps 8 \
+        --churn 0.25 --byzantine 0.125 --aggregation trimmed_mean \
+        --compress topk
+    echo "== robust-train drift gate (survivor consensus error vs committed) =="
+    python tools/check_artifacts.py --robust-train-only
 fi
 
 echo "CI OK"
